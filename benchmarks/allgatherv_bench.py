@@ -1,0 +1,98 @@
+"""Paper Figures 2-3: irregular allgather (allgatherv), circulant vs ring.
+
+Problem types exactly as in the paper:
+  * regular    -- every rank contributes m/p,
+  * irregular  -- rank i contributes (i mod 3) * m/p (plus 1),
+  * degenerate -- rank 0 contributes everything, others nothing.
+
+For each, wall-clock on p=8 host devices of the circulant allgatherv
+(whose per-round wire volume tracks sum(sizes)) vs a padded ring
+allgather (whose volume is p * max(sizes) -- the degenerate case is
+where the paper's native-MPI baseline loses a factor ~100).  Plus the
+alpha-beta model sweep at the paper's p = 1152.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from repro.core.costmodel import (
+    CommModel,
+    allgather_bruck_cost,
+    allgather_circulant_cost,
+    allgather_ring_cost,
+    optimal_num_blocks_allgather,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SIZES = [1 << k for k in range(8, 25, 2)]
+
+
+def model_rows(p: int = 36 * 32, model: CommModel = CommModel(alpha=2e-6, beta=1 / 10e9)):
+    rows = []
+    for m in SIZES:
+        n = optimal_num_blocks_allgather(p, m, model)
+        rows.append({
+            "m": m, "n_opt": n,
+            "circulant_us": 1e6 * allgather_circulant_cost(p, m, n, model),
+            "ring_us": 1e6 * allgather_ring_cost(p, m, model),
+            "bruck_us": 1e6 * allgather_bruck_cost(p, m, model),
+        })
+    return rows
+
+
+def wallclock_rows(p: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    code = r"""
+import time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.collectives import circulant_allgatherv, ring_allgather
+p = len(jax.devices())
+mesh = Mesh(np.array(jax.devices()), ("data",))
+total = 1 << 20  # elements (4 MB): bandwidth-dominated on the host too
+problems = {
+    "regular": [total // p] * p,
+    "irregular": [max(1, (i % 3) * total // p) for i in range(p)],
+    "degenerate": [total] + [1] * (p - 1),
+}
+for kind, sizes in problems.items():
+    cap = max(sizes)
+    x = jax.device_put(jnp.zeros((p, cap), jnp.float32), NamedSharding(mesh, P("data")))
+    fv = jax.jit(lambda a: circulant_allgatherv(mesh, "data", a, sizes, n_blocks=2))
+    fr = jax.jit(lambda a: ring_allgather(mesh, "data", a))  # padded to cap
+    for name, f in (("circulant_v", fv), ("ring_padded", fr)):
+        f(x).block_until_ready()
+        t0 = time.perf_counter(); it = 10
+        for _ in range(it):
+            f(x).block_until_ready()
+        dt = (time.perf_counter() - t0) / it
+        print(f"WC,{kind},{name},{dt*1e6:.1f}")
+"""
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(res.stderr[-2000:])
+    rows = []
+    for line in res.stdout.splitlines():
+        if line.startswith("WC,"):
+            _, kind, name, us = line.split(",")
+            rows.append({"kind": kind, "impl": name, "us": float(us)})
+    return rows
+
+
+def main():
+    print("name,m_bytes,n_opt,circulant_us,ring_us,bruck_us")
+    for r in model_rows():
+        print(f"fig23_model,{r['m']},{r['n_opt']},{r['circulant_us']:.1f},"
+              f"{r['ring_us']:.1f},{r['bruck_us']:.1f}")
+    print("name,problem,impl,us_per_call")
+    for r in wallclock_rows():
+        print(f"fig23_wallclock,{r['kind']},{r['impl']},{r['us']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Paper Figure 1: broadcast, circulant n-block vs classic algorithms.
+
+Two complementary measurements (no real cluster in this container):
+
+  1. alpha-beta model sweep over message size m and p = 36*32 = 1152
+     (the paper's cluster size): circulant with the analytically-optimal
+     n vs binomial tree vs scatter-allgather vs linear pipeline.
+  2. wall-clock on host devices (subprocess, p=8): the JAX circulant
+     broadcast vs XLA's native broadcast path and ring allgather-based
+     bcast, in microseconds per call.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+from repro.core.costmodel import (
+    CommModel,
+    bcast_binomial_cost,
+    bcast_circulant_cost,
+    bcast_linear_pipeline_cost,
+    bcast_scatter_allgather_cost,
+    optimal_num_blocks_bcast,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+P_CLUSTER = 36 * 32
+SIZES = [1 << k for k in range(6, 27, 2)]  # 64 B .. 64 MB
+
+
+def model_rows(p: int = P_CLUSTER, model: CommModel = CommModel(alpha=2e-6, beta=1 / 10e9)):
+    rows = []
+    for m in SIZES:
+        n = optimal_num_blocks_bcast(p, m, model)
+        rows.append({
+            "m": m,
+            "n_opt": n,
+            "circulant_us": 1e6 * bcast_circulant_cost(p, m, n, model),
+            "binomial_us": 1e6 * bcast_binomial_cost(p, m, model),
+            "scatter_ag_us": 1e6 * bcast_scatter_allgather_cost(p, m, model),
+            "pipeline_us": 1e6 * bcast_linear_pipeline_cost(
+                p, m, max(1, n), model),
+        })
+    return rows
+
+
+def wallclock_rows(p: int = 8):
+    """Run the host-device wall-clock benchmark in a subprocess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    code = r"""
+import time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.collectives import circulant_broadcast, ring_allgather
+p = len(jax.devices())
+mesh = Mesh(np.array(jax.devices()), ("data",))
+for m in (1024, 65536, 1048576):
+    elems = m // 4
+    x = jax.device_put(jnp.zeros((p, elems), jnp.float32), NamedSharding(mesh, P("data")))
+    for name, fn in [
+        ("circulant_n1", lambda a: circulant_broadcast(mesh, "data", a, n_blocks=1)),
+        ("circulant_nopt", lambda a: circulant_broadcast(mesh, "data", a)),
+        ("ring_ag", lambda a: ring_allgather(mesh, "data", a)),
+    ]:
+        f = jax.jit(fn)
+        f(x)[0].block_until_ready() if hasattr(f(x), '__getitem__') else None
+        t0 = time.perf_counter(); it = 20
+        for _ in range(it):
+            r = f(x)
+            jax.tree.leaves(r)[0].block_until_ready()
+        dt = (time.perf_counter() - t0) / it
+        print(f"WC,{name},{m},{dt*1e6:.1f}")
+"""
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    rows = []
+    for line in res.stdout.splitlines():
+        if line.startswith("WC,"):
+            _, name, m, us = line.split(",")
+            rows.append({"impl": name, "m": int(m), "us": float(us)})
+    if res.returncode != 0:
+        raise RuntimeError(res.stderr[-2000:])
+    return rows
+
+
+def main():
+    print("name,m_bytes,n_opt,circulant_us,binomial_us,scatter_ag_us,pipeline_us")
+    for r in model_rows():
+        print(f"fig1_model,{r['m']},{r['n_opt']},{r['circulant_us']:.1f},"
+              f"{r['binomial_us']:.1f},{r['scatter_ag_us']:.1f},{r['pipeline_us']:.1f}")
+    print("name,impl,m_bytes,us_per_call")
+    for r in wallclock_rows():
+        print(f"fig1_wallclock,{r['impl']},{r['m']},{r['us']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark driver: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table3     # one section
+
+Output is CSV (name,...) so EXPERIMENTS.md tables can be regenerated.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    t0 = time.time()
+
+    if which in ("table3", "all"):
+        print("# === Table 3: schedule computation timing ===")
+        from benchmarks import schedule_timing
+
+        schedule_timing.main()
+
+    if which in ("fig1", "all"):
+        print("# === Figure 1: broadcast ===")
+        from benchmarks import bcast_bench
+
+        bcast_bench.main()
+
+    if which in ("fig23", "all"):
+        print("# === Figures 2-3: (irregular) allgather ===")
+        from benchmarks import allgatherv_bench
+
+        allgatherv_bench.main()
+
+    if which in ("verify", "all"):
+        print("# === Correctness sweep (paper section 3 verification) ===")
+        from repro.core.verify import verify_p
+
+        t = time.time()
+        ps = list(range(1, 1025)) + [2048, 4096, 8191, 65536, 65537, 1 << 20]
+        for p in ps:
+            verify_p(p)
+        print(f"verify,{len(ps)}_values_of_p_up_to_{max(ps)},"
+              f"{time.time()-t:.1f}s,all_four_conditions_hold")
+
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Paper Table 3: schedule-computation timing, legacy vs new.
+
+For each p in a range, compute receive + send schedules for all
+processors r in 0..p-1 with (a) the legacy O(log^2 p)/O(log^3 p)
+constructions and (b) the new O(log p) algorithms; report total seconds
+and the average per-processor microseconds, exactly the two columns of
+the paper's Table 3 (ranges are scaled to CI time; pass --full for the
+paper's ranges).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.reference import recv_schedule_legacy, send_schedule_legacy
+from repro.core.schedule import compute_skips, recv_schedule, send_schedule
+
+# CI-sized p ranges (paper uses [1,17000] ... [2097000,2099000]); for
+# p above SAMPLE_RANKS we time a uniform sample of ranks and report the
+# per-processor average (the paper's metric), since pure-Python timing
+# of 262k+ ranks per p is a CPU-hours exercise that measures the same
+# asymptotics.
+RANGES = [
+    (1, 400, None),
+    (4000, 4016, None),
+    (16000, 16008, 2048),
+    (65000, 65004, 1024),
+    (262000, 262002, 512),
+    (1048575, 1048577, 256),
+]
+
+FULL_RANGES = [(lo, hi, None) for lo, hi in
+               [(1, 17000), (16000, 33000), (64000, 73000)]]
+
+
+def time_range(lo: int, hi: int, new: bool, max_ranks=None):
+    t0 = time.perf_counter()
+    per_p = []
+    for p in range(lo, hi):
+        skip = compute_skips(p)
+        stride = max(1, p // max_ranks) if max_ranks else 1
+        ranks = range(0, p, stride)
+        t1 = time.perf_counter()
+        if new:
+            for r in ranks:
+                recv_schedule(p, r, skip)
+                send_schedule(p, r, skip)
+        else:
+            for r in ranks:
+                recv_schedule_legacy(p, r, skip)
+                send_schedule_legacy(p, r, skip)
+        per_p.append((time.perf_counter() - t1) / max(len(ranks), 1))
+    total = time.perf_counter() - t0
+    avg_us = 1e6 * sum(per_p) / len(per_p)
+    return total, avg_us
+
+
+def run(full: bool = False):
+    rows = []
+    for lo, hi, max_ranks in (FULL_RANGES if full else RANGES):
+        t_old, us_old = time_range(lo, hi, new=False, max_ranks=max_ranks)
+        t_new, us_new = time_range(lo, hi, new=True, max_ranks=max_ranks)
+        rows.append({
+            "range": f"[{lo},{hi})",
+            "total_s_legacy": round(t_old, 2),
+            "total_s_new": round(t_new, 2),
+            "us_per_proc_legacy": round(us_old, 3),
+            "us_per_proc_new": round(us_new, 3),
+            "speedup": round(us_old / max(us_new, 1e-12), 1),
+        })
+    return rows
+
+
+def main():
+    print("name,range,total_s_legacy,total_s_new,us_legacy,us_new,speedup")
+    for row in run():
+        print(
+            f"table3,{row['range']},{row['total_s_legacy']},{row['total_s_new']},"
+            f"{row['us_per_proc_legacy']},{row['us_per_proc_new']},{row['speedup']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

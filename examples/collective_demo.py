@@ -1,0 +1,79 @@
+"""Circulant collectives on real (host) devices.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/collective_demo.py
+
+Runs the paper's n-block broadcast and irregular allgather as JAX
+collectives (shard_map + lax.ppermute rounds driven by the O(log p)
+schedules) over 8 devices, checks results, and prints the per-round
+communication plan for one rank.
+"""
+
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.collectives import (
+    build_tables,
+    circulant_allgatherv,
+    circulant_broadcast,
+)
+from repro.core.schedule import compute_skips, virtual_rounds
+
+
+def main():
+    p = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    print(f"devices: {p}")
+
+    # ---- the communication plan of rank 1 for a 5-block broadcast
+    n = 5
+    tabs = build_tables(p)
+    x = virtual_rounds(p, n)
+    print(f"\nbroadcast plan p={p}, n={n}: rounds = n-1+q = {n-1+tabs.q}, "
+          f"virtual rounds x={x}")
+    r = 1
+    print(f"rank {r}: recv sched {list(tabs.recv[r])}, send sched {list(tabs.send[r])}")
+    for i in range(x, n - 1 + tabs.q + x):
+        k = i % tabs.q
+        off = tabs.q * ((i - k) // tabs.q) - x
+        rb = int(tabs.recv[r][k]) + off
+        sb = int(tabs.send[r][k]) + off
+        frm = (r - tabs.skip[k]) % p
+        to = (r + tabs.skip[k]) % p
+        print(f"  round {i-x}: recv block {rb if rb>=0 else '--'} from {frm}, "
+              f"send block {sb if sb>=0 else '--'} to {to}")
+
+    # ---- run it
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(p, 1000)).astype(np.float32)
+    xs = jax.device_put(jnp.asarray(data), NamedSharding(mesh, P("data")))
+    out = jax.jit(lambda a: circulant_broadcast(mesh, "data", a, n_blocks=n))(xs)
+    assert np.allclose(np.asarray(out), data[0]), "broadcast mismatch"
+    print("\ncirculant_broadcast: every rank holds root's data  OK")
+
+    # ---- irregular allgather, degenerate sizes (paper Figure 2's hard case)
+    sizes = [900] + [20] * (p - 1)
+    rows = np.zeros((p, max(sizes)), np.float32)
+    for j in range(p):
+        rows[j, : sizes[j]] = rng.normal(size=sizes[j])
+    xs = jax.device_put(jnp.asarray(rows), NamedSharding(mesh, P("data")))
+    out = np.asarray(jax.jit(
+        lambda a: circulant_allgatherv(mesh, "data", a, sizes, n_blocks=3)
+    )(xs))
+    for j in range(p):
+        assert np.allclose(out[j, : sizes[j]], rows[j, : sizes[j]])
+    print("circulant_allgatherv (degenerate sizes): all rows delivered  OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end training driver: train a small LM on synthetic data with the
+full substrate (data pipeline, AdamW, microbatching, checkpointing,
+auto-resume).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60           # quick
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-0.5b \
+        --full --steps 300 --batch 8                                # ~0.5B
+
+Defaults train a ~20M-parameter qwen2-family model for 60 steps on CPU
+(a few minutes); --full uses the real architecture config.  Kill it at
+any point and re-run: it resumes from the last checkpoint and replays
+the exact data stream.
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.common import ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.checkpoint import CheckpointManager
+from repro.train.trainer import TrainConfig, init_train_state, make_train_step
+
+
+def small_config(vocab=4096):
+    return ModelConfig(
+        name="lm-20m", family="dense", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, d_ff=1024, vocab=vocab, tie_embeddings=True,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the real arch config (default: ~20M toy)")
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else small_config()
+    print(f"model: {cfg.name}  params ~{cfg.param_count()/1e6:.1f}M")
+
+    tcfg = TrainConfig(
+        microbatches=args.microbatches,
+        remat="full",
+        opt=AdamWConfig(lr=args.lr, warmup_steps=20, total_steps=args.steps),
+    )
+    data = SyntheticLM(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch))
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0,))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start, state, extra = mgr.restore_latest(state)
+    t0_step = int(extra.get("data_step", 0)) if start is not None else 0
+    if start is not None:
+        print(f"resumed from checkpoint step {start}")
+
+    losses = []
+    t0 = time.time()
+    for i in range(t0_step, args.steps):
+        batch = data.batch_at(i)
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+        if (i + 1) % 10 == 0:
+            dt = (time.time() - t0) / max(1, len(losses))
+            print(f"step {i+1:4d}  loss {losses[-1]:.4f}  "
+                  f"grad_norm {float(m['grad_norm']):.3f}  {dt*1e3:.0f} ms/step")
+        if (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, state, extra={"data_step": i + 1})
+    mgr.wait()
+
+    first = np.mean(losses[:5]) if len(losses) >= 5 else losses[0]
+    last = np.mean(losses[-5:])
+    print(f"\nloss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Core: round-optimal n-block broadcast schedules (Träff 2023) in O(log p).
+
+Public API:
+    compute_skips, baseblock, recv_schedule, send_schedule, schedule_tables
+    verify_schedules, simulate_broadcast, simulate_allgather
+"""
+
+from .schedule import (
+    baseblock,
+    ceil_log2,
+    compute_skips,
+    num_rounds,
+    recv_schedule,
+    schedule_tables,
+    send_schedule,
+    virtual_rounds,
+)
+from .simulator import SimResult, simulate_allgather, simulate_broadcast
+from .verify import verify_p, verify_schedules
+
+__all__ = [
+    "baseblock",
+    "ceil_log2",
+    "compute_skips",
+    "num_rounds",
+    "recv_schedule",
+    "schedule_tables",
+    "send_schedule",
+    "virtual_rounds",
+    "SimResult",
+    "simulate_allgather",
+    "simulate_broadcast",
+    "verify_p",
+    "verify_schedules",
+]

@@ -1,0 +1,447 @@
+"""JAX circulant-graph collectives driven by the paper's schedules.
+
+TPU-native adaptation of Algorithm 1 (broadcast) and Algorithm 2
+(all-to-all broadcast / allgatherv): each communication round
+``Send(t^k) || Recv(f^k)`` on the circulant graph is one
+``jax.lax.ppermute`` with the static rotation ``r -> (r + skip[k]) % p``.
+The per-rank receive/send block indices come from the O(log p) schedule
+algorithms; they are baked into small [p, q] integer tables (total host
+cost O(p log p), i.e. O(log p) per participating device) and looked up
+with the device's own ``axis_index`` at run time, so the traced program
+is identical on every device (SPMD).
+
+Hardware adaptation notes (see DESIGN.md):
+  * the paper's one-ported bidirectional model maps to one ppermute per
+    round: every chip sends and receives exactly one block per round;
+  * skips are arbitrary rotations; on a TPU torus a rotation by s costs
+    multiple ICI hops, so the roofline collective term counts the
+    *bytes x rounds* while the latency term counts rounds (the paper's
+    metric).  On pod-interconnect/DCN (where broadcast/allgatherv of
+    checkpoints and irregular activations actually happen) rotations are
+    switch-routed and the paper's model applies directly.
+
+Negative block indices ("neither sent nor received") are realized with a
+garbage slot: buffers carry n+1 block slots, index n is scratch.  By
+Correctness Condition 1 the sender's block index is negative exactly when
+the receiver's is, so both sides address the garbage slot in the same
+round and no masking is needed.  Indices > n-1 are capped to n-1 (final
+phase), exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache, partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .costmodel import CommModel, optimal_num_blocks_allgather, optimal_num_blocks_bcast
+from .schedule import ceil_log2, compute_skips, schedule_tables, virtual_rounds
+
+__all__ = [
+    "circulant_broadcast",
+    "circulant_allgather",
+    "circulant_allgatherv",
+    "ring_allgather",
+    "CirculantTables",
+    "build_tables",
+]
+
+
+class CirculantTables:
+    """Host-side schedule constants for one axis size p."""
+
+    def __init__(self, p: int):
+        self.p = p
+        self.q = ceil_log2(p)
+        self.skip = compute_skips(p)
+        recv, send = schedule_tables(p)
+        # [p, q] int32 tables; q == 0 (p == 1) handled by callers.
+        self.recv = np.asarray(recv, dtype=np.int32).reshape(p, self.q)
+        self.send = np.asarray(send, dtype=np.int32).reshape(p, self.q)
+
+    def rounds(self, n: int) -> int:
+        return n - 1 + self.q
+
+    def x(self, n: int) -> int:
+        return virtual_rounds(self.p, n)
+
+
+@lru_cache(maxsize=64)
+def build_tables(p: int) -> CirculantTables:
+    return CirculantTables(p)
+
+
+def _rot_perm(p: int, s: int):
+    """Static ppermute pairs for the rotation r -> (r + s) % p."""
+    return [(r, (r + s) % p) for r in range(p)]
+
+
+def _split_blocks(flat: jnp.ndarray, n: int):
+    """Split a flat vector into n padded blocks + 1 garbage slot: [n+1, B]."""
+    size = flat.shape[0]
+    bs = -(-size // n)  # ceil
+    pad = n * bs - size
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(n, bs)
+    garbage = jnp.zeros((1, bs), flat.dtype)
+    return jnp.concatenate([blocks, garbage], axis=0), bs, pad
+
+
+def _round_offsets(q: int, x: int, n: int):
+    """Static per-round (k, offset) pairs: eff = sched[k] + off, see
+    schedule adjustment folding in DESIGN.md (off_i = q*((i-k)//q) - x)."""
+    out = []
+    for i in range(x, n + q - 1 + x):
+        k = i % q
+        out.append((k, q * ((i - k) // q) - x))
+    return out
+
+
+# --------------------------------------------------------------- broadcast
+
+
+def circulant_broadcast(
+    mesh: Mesh,
+    axis_name: str,
+    x: jax.Array,
+    *,
+    n_blocks: Optional[int] = None,
+    root: int = 0,
+    model: CommModel = CommModel(),
+):
+    """Round-optimal n-block broadcast of ``x[root]`` along a mesh axis.
+
+    ``x`` has a leading axis of size p sharded over ``axis_name`` (each
+    rank owns one slice; only the root's slice content matters).  Returns
+    an array of the same spec where every slice equals ``x[root]``.
+    Runs in n-1+ceil(log2 p) ppermute rounds (Algorithm 1).
+    """
+    p = mesh.shape[axis_name]
+    if p == 1:
+        return x
+    tabs = build_tables(p)
+    q = tabs.q
+    per = x.shape[0] // p if x.shape[0] % p == 0 else None
+    if per != 1:
+        raise ValueError("x must have leading axis == axis size (one slice/rank)")
+    elems = int(np.prod(x.shape[1:]))
+    n = n_blocks or max(1, optimal_num_blocks_bcast(p, elems * x.dtype.itemsize, model))
+    n = min(n, max(1, elems))
+    recv_t = jnp.asarray(tabs.recv)
+    send_t = jnp.asarray(tabs.send)
+    xv = tabs.x(n)
+    rounds = _round_offsets(q, xv, n)
+
+    def body(xs):
+        r = jax.lax.axis_index(axis_name)
+        v = (r - root) % p  # virtual rank (paper: renumber so root = 0)
+        flat = xs.reshape(-1)
+        buf, bs, pad = _split_blocks(flat, n)
+        is_root = (v == 0)
+        buf = jnp.where(is_root, buf, jnp.zeros_like(buf))
+        my_recv = recv_t[v]  # [q]
+        my_send = send_t[v]
+        for (k, off) in rounds:
+            sb = my_send[k] + off
+            rb = my_recv[k] + off
+            send_slot = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
+            recv_slot = jnp.where(rb < 0, n, jnp.minimum(rb, n - 1))
+            out_blk = jax.lax.dynamic_slice_in_dim(buf, send_slot, 1, axis=0)
+            got = jax.lax.ppermute(out_blk, axis_name, _rot_perm(p, tabs.skip[k]))
+            buf = jax.lax.dynamic_update_slice_in_dim(buf, got, recv_slot, axis=0)
+        out = buf[:n].reshape(-1)[: flat.shape[0]]
+        return out.reshape(xs.shape)
+
+    shard = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis_name),
+        out_specs=P(axis_name),
+    )
+    return shard(x)
+
+
+# --------------------------------------------------------------- allgather
+
+
+def circulant_allgather(
+    mesh: Mesh,
+    axis_name: str,
+    x: jax.Array,
+    *,
+    n_blocks: Optional[int] = None,
+    model: CommModel = CommModel(),
+):
+    """All-to-all broadcast (regular allgather) along a mesh axis.
+
+    ``x``: global array sharded on its leading dim over ``axis_name``.
+    Returns the fully replicated gathered array (same global shape,
+    spec ()).  This is Algorithm 2 with equal-size contributions; the
+    per-round message packs one block per root (p-1 useful + 1 garbage
+    row kept for a uniform [p, B] layout).
+    """
+    p = mesh.shape[axis_name]
+    if p == 1:
+        return x
+    tabs = build_tables(p)
+    q = tabs.q
+    if x.shape[0] % p != 0:
+        raise ValueError(f"leading dim {x.shape[0]} not divisible by axis size {p}")
+    shard_elems = int(np.prod(x.shape[1:])) * (x.shape[0] // p)
+    nbytes = shard_elems * x.dtype.itemsize * p
+    n = n_blocks or max(1, optimal_num_blocks_allgather(p, nbytes, model))
+    n = min(n, max(1, shard_elems))
+    recv_t = jnp.asarray(tabs.recv)  # [p, q]
+    xv = tabs.x(n)
+    rounds = _round_offsets(q, xv, n)
+    jidx = jnp.arange(p)
+
+    def body(xs):
+        # xs: this rank's shard with leading dim x.shape[0]//p
+        r = jax.lax.axis_index(axis_name)
+        flat = xs.reshape(-1)
+        own, bs, pad = _split_blocks(flat, n)  # [n+1, bs]
+        # buffers[j]: blocks of root j; own row filled, others zero.
+        buf = jnp.zeros((p, n + 1, bs), xs.dtype)
+        buf = jax.lax.dynamic_update_slice(buf, own[None], (r, 0, 0))
+        for (k, off) in rounds:
+            sk = tabs.skip[k]
+            # recvblocks_r[j][k] = recv[(r - j) % p][k]
+            rb = recv_t[(r - jidx) % p, k] + off
+            # sendblocks_r[j][k] = recv[(r - j + skip[k]) % p][k]
+            sb = recv_t[(r - jidx + sk) % p, k] + off
+            send_slot = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
+            recv_slot = jnp.where(rb < 0, n, jnp.minimum(rb, n - 1))
+            msg = jnp.take_along_axis(buf, send_slot[:, None, None], axis=1)
+            got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, sk))
+            buf = jax.lax.scatter(
+                buf,
+                jnp.stack([jidx, recv_slot], axis=-1),
+                got[:, 0, :],
+                jax.lax.ScatterDimensionNumbers(
+                    update_window_dims=(1,),
+                    inserted_window_dims=(0, 1),
+                    scatter_dims_to_operand_dims=(0, 1),
+                ),
+                mode="promise_in_bounds",
+            )
+        out = buf[:, :n, :].reshape(p, -1)[:, : flat.shape[0]]
+        return out.reshape((x.shape[0],) + x.shape[1:])
+
+    shard = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis_name),
+        out_specs=P(),
+        check_vma=False,  # result is replicated by construction
+    )
+    return shard(x)
+
+
+def circulant_allgatherv(
+    mesh: Mesh,
+    axis_name: str,
+    x: jax.Array,
+    sizes: Sequence[int],
+    *,
+    n_blocks: Optional[int] = None,
+    model: CommModel = CommModel(),
+):
+    """Irregular allgather (MPI_Allgatherv analogue), Algorithm 2 proper.
+
+    ``x``: [p, cap] sharded over ``axis_name``; rank j's contribution is
+    x[j, :sizes[j]] (the rest is padding).  Sizes are static.  Every rank
+    divides its contribution into n blocks of (static, per-rank) size
+    ceil(sizes[j]/n); the per-round message concatenates one block per
+    root, so the wire volume tracks sum(sizes), not p*max(sizes) --
+    this is what makes the degenerate case fast (paper Figure 2).
+    Returns the replicated [p, cap] array with row j = rank j's data.
+    """
+    p = mesh.shape[axis_name]
+    sizes = [int(s) for s in sizes]
+    assert len(sizes) == p
+    if p == 1:
+        return x
+    tabs = build_tables(p)
+    q = tabs.q
+    total = sum(sizes)
+    n = n_blocks or max(
+        1, optimal_num_blocks_allgather(p, max(total, 1) * x.dtype.itemsize, model)
+    )
+    n = min(n, max(1, min([s for s in sizes if s > 0], default=1)))
+    bs_j = [max(1, -(-sizes[j] // n)) for j in range(p)]  # per-root block size
+    recv_t = jnp.asarray(tabs.recv)
+    xv = tabs.x(n)
+    rounds = _round_offsets(q, xv, n)
+    cap = x.shape[-1]
+
+    def body(xs):
+        r = jax.lax.axis_index(axis_name)
+        flat = xs.reshape(-1)  # [cap], own contribution padded to cap
+        # Per-root buffers with static per-root block sizes (+ garbage slot).
+        bufs: List[jnp.ndarray] = []
+        for j in range(p):
+            pj = jnp.pad(flat[: min(cap, n * bs_j[j])],
+                         (0, max(0, n * bs_j[j] - cap)))
+            own = jnp.concatenate(
+                [pj[: n * bs_j[j]].reshape(n, bs_j[j]),
+                 jnp.zeros((1, bs_j[j]), xs.dtype)], axis=0)
+            bufs.append(jnp.where(r == j, own, jnp.zeros_like(own)))
+        for (k, off) in rounds:
+            sk = tabs.skip[k]
+            parts = []
+            slots_r = []
+            for j in range(p):
+                sb = recv_t[(r - j + sk) % p, k] + off
+                rb = recv_t[(r - j) % p, k] + off
+                ss = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
+                rs = jnp.where(rb < 0, n, jnp.minimum(rb, n - 1))
+                parts.append(jax.lax.dynamic_slice_in_dim(bufs[j], ss, 1, 0)[0])
+                slots_r.append(rs)
+            msg = jnp.concatenate(parts)  # [sum bs_j]
+            got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, sk))
+            o = 0
+            for j in range(p):
+                piece = got[o : o + bs_j[j]][None]
+                bufs[j] = jax.lax.dynamic_update_slice_in_dim(
+                    bufs[j], piece, slots_r[j], 0
+                )
+                o += bs_j[j]
+        rows = []
+        for j in range(p):
+            rj = bufs[j][:n].reshape(-1)[: sizes[j]]
+            rows.append(jnp.pad(rj, (0, cap - sizes[j])))
+        return jnp.stack(rows)
+
+    shard = jax.shard_map(
+        body, mesh=mesh, in_specs=P(axis_name), out_specs=P(), check_vma=False
+    )
+    return shard(x)
+
+
+# ---------------------------------------------------- reduce-scatter (NEW)
+
+
+def circulant_reduce_scatter(
+    mesh: Mesh,
+    axis_name: str,
+    x: jax.Array,
+    *,
+    n_blocks: Optional[int] = None,
+    model: CommModel = CommModel(),
+):
+    """BEYOND-PAPER: round-optimal reduce-scatter by *time reversal* of the
+    circulant all-to-all broadcast (allgather and reduce-scatter are dual
+    collectives; reversing every round of Algorithm 2 -- negated
+    rotations, send-what-you-received, accumulate-what-you-sent -- yields
+    an n-1+ceil(log2 p)-round reduce-scatter on the same schedules).
+
+    ``x``: [p, L] sharded on dim 0 over ``axis_name``; row r is rank r's
+    full L-length contribution with L = p * shard.  Returns [p, shard]
+    sharded the same way: row r = sum_r' x[r'] restricted to shard r.
+
+    Capped block indices (> n-1) are real deliveries for small n; the
+    reversal routes them with drain-after-send so every contribution
+    reaches its root exactly once (verified for all p<=100 x n<=13 in
+    tests).
+    """
+    p = mesh.shape[axis_name]
+    if p == 1:
+        return x
+    tabs = build_tables(p)
+    q = tabs.q
+    L = x.shape[1]
+    if L % p != 0:
+        raise ValueError(f"row length {L} not divisible by p={p}")
+    shard = L // p
+    n = n_blocks or max(
+        1, optimal_num_blocks_allgather(p, L * x.dtype.itemsize, model)
+    )
+    n = min(n, max(1, shard))
+    recv_t = jnp.asarray(tabs.recv)
+    xv = tabs.x(n)
+    rounds = _round_offsets(q, xv, n)
+    jidx = jnp.arange(p)
+
+    def body(xs):
+        r = jax.lax.axis_index(axis_name)
+        # partials per root j: [p, n+1, bs] (slot n = garbage)
+        rows = xs[0].reshape(p, shard)              # contribution per root
+        bs = -(-shard // n)
+        pad = n * bs - shard
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+        buf = jnp.concatenate(
+            [rows.reshape(p, n, bs), jnp.zeros((p, 1, bs), xs.dtype)], axis=1
+        ).astype(jnp.float32)
+        for (k, off) in reversed(rounds):
+            sk = tabs.skip[k]
+            # reverse of my forward receive: what I got, I now send
+            e_send = recv_t[(r - jidx) % p, k] + off
+            send_slot = jnp.where(e_send < 0, n, jnp.minimum(e_send, n - 1))
+            msg = jnp.take_along_axis(buf, send_slot[:, None, None], axis=1)
+            # drain after send (each partial flows along one tree edge)
+            buf = jax.lax.scatter(
+                buf, jnp.stack([jidx, send_slot], axis=-1),
+                jnp.zeros((p, bs), buf.dtype),
+                jax.lax.ScatterDimensionNumbers(
+                    update_window_dims=(1,), inserted_window_dims=(0, 1),
+                    scatter_dims_to_operand_dims=(0, 1)),
+                mode="promise_in_bounds",
+            )
+            got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, p - sk % p))
+            # accumulate into the reverse of my forward send slot
+            e_acc = recv_t[(r - jidx + sk) % p, k] + off
+            acc_slot = jnp.where(e_acc < 0, n, jnp.minimum(e_acc, n - 1))
+            buf = jax.lax.scatter_add(
+                buf, jnp.stack([jidx, acc_slot], axis=-1), got[:, 0, :],
+                jax.lax.ScatterDimensionNumbers(
+                    update_window_dims=(1,), inserted_window_dims=(0, 1),
+                    scatter_dims_to_operand_dims=(0, 1)),
+                mode="promise_in_bounds",
+            )
+        own = jax.lax.dynamic_slice(buf, (r, 0, 0), (1, n, bs))
+        out = own.reshape(-1)[:shard].astype(xs.dtype)
+        return out[None]
+
+    shard_fn = jax.shard_map(
+        body, mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name)
+    )
+    return shard_fn(x)
+
+
+# ----------------------------------------------------------- ring baseline
+
+
+def ring_allgather(mesh: Mesh, axis_name: str, x: jax.Array):
+    """Classic p-1 round ring allgather baseline (bandwidth-optimal,
+    latency p-1 rounds vs the circulant's n-1+ceil(log2 p))."""
+    p = mesh.shape[axis_name]
+    if p == 1:
+        return x
+
+    def body(xs):
+        r = jax.lax.axis_index(axis_name)
+        parts = [(r, xs)]
+        cur = xs
+        for _ in range(p - 1):
+            cur = jax.lax.ppermute(cur, axis_name, _rot_perm(p, 1))
+            parts.append((None, cur))
+        # piece i came from rank (r - i) % p; place rows by origin
+        buf = jnp.zeros((p,) + xs.shape, xs.dtype)
+        cur = xs
+        buf = jax.lax.dynamic_update_slice(buf, xs[None], (r,) + (0,) * xs.ndim)
+        for i in range(1, p):
+            cur = parts[i][1]
+            src = (r - i) % p
+            buf = jax.lax.dynamic_update_slice(buf, cur[None], (src,) + (0,) * xs.ndim)
+        return buf.reshape((p * xs.shape[0],) + xs.shape[1:])
+
+    shard = jax.shard_map(
+        body, mesh=mesh, in_specs=P(axis_name), out_specs=P(), check_vma=False
+    )
+    return shard(x)

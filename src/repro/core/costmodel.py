@@ -1,0 +1,136 @@
+"""Linear (alpha-beta) communication cost models for the paper's collectives.
+
+Used to (a) choose the number of blocks n for a given message size as in
+the paper's experiments (block size F*sqrt(m/ceil(log p)) for broadcast,
+n = sqrt(m*ceil(log p))/G blocks for allgatherv), and (b) produce the
+simulated Figure-1/2/3 comparisons against classic algorithms (binomial
+tree, scatter-allgather, ring, recursive doubling, Bruck).
+
+Model: sending a message of m bytes costs alpha + beta*m; all processors
+may send one and receive one message per round (one-ported, fully
+bidirectional); rounds are synchronous.  Costs are per the critical path.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .schedule import ceil_log2
+
+__all__ = [
+    "CommModel",
+    "bcast_circulant_cost",
+    "bcast_binomial_cost",
+    "bcast_scatter_allgather_cost",
+    "bcast_linear_pipeline_cost",
+    "allgather_circulant_cost",
+    "allgather_ring_cost",
+    "allgather_bruck_cost",
+    "optimal_num_blocks_bcast",
+    "optimal_num_blocks_allgather",
+]
+
+
+@dataclass(frozen=True)
+class CommModel:
+    """alpha: per-message latency (s); beta: per-byte time (s/byte)."""
+
+    alpha: float = 1e-6
+    beta: float = 1.0 / 50e9  # ~50 GB/s link
+
+    def msg(self, nbytes: float) -> float:
+        return self.alpha + self.beta * nbytes
+
+
+def bcast_circulant_cost(p: int, m: float, n: int, model: CommModel) -> float:
+    """n-block circulant broadcast: n-1+q rounds of ceil(m/n)-byte messages."""
+    if p == 1:
+        return 0.0
+    q = ceil_log2(p)
+    return (n - 1 + q) * model.msg(math.ceil(m / n))
+
+
+def bcast_binomial_cost(p: int, m: float, model: CommModel) -> float:
+    """Binomial tree: q rounds of the full message."""
+    if p == 1:
+        return 0.0
+    return ceil_log2(p) * model.msg(m)
+
+
+def bcast_scatter_allgather_cost(p: int, m: float, model: CommModel) -> float:
+    """Van-de-Geijn: binomial scatter + ring allgather (classic large-m)."""
+    if p == 1:
+        return 0.0
+    q = ceil_log2(p)
+    scatter = q * model.alpha + model.beta * m * (p - 1) / p
+    allgather = (p - 1) * model.msg(m / p)
+    return scatter + allgather
+
+
+def bcast_linear_pipeline_cost(p: int, m: float, n: int, model: CommModel) -> float:
+    """Linear pipeline through a chain: p-1+n-1 rounds of m/n blocks."""
+    if p == 1:
+        return 0.0
+    return (p - 2 + n) * model.msg(math.ceil(m / n))
+
+
+def allgather_circulant_cost(p: int, m: float, n: int, model: CommModel) -> float:
+    """Circulant all-to-all broadcast of per-rank m/p bytes in n blocks.
+
+    Round message: (p-1) blocks of size m/(p*n) -> n-1+q rounds.
+    """
+    if p == 1:
+        return 0.0
+    q = ceil_log2(p)
+    per_round = (p - 1) * math.ceil(m / (p * n))
+    return (n - 1 + q) * model.msg(per_round)
+
+
+def allgather_ring_cost(p: int, m: float, model: CommModel) -> float:
+    """Ring allgather: p-1 rounds of m/p bytes."""
+    if p == 1:
+        return 0.0
+    return (p - 1) * model.msg(m / p)
+
+
+def allgather_bruck_cost(p: int, m: float, model: CommModel) -> float:
+    """Bruck/recursive-doubling allgather: q rounds, doubling volume."""
+    if p == 1:
+        return 0.0
+    q = ceil_log2(p)
+    total = 0.0
+    have = m / p
+    for _ in range(q):
+        total += model.msg(min(have, m - have) if have < m else 0)
+        have = min(2 * have, m)
+    return total
+
+
+def optimal_num_blocks_bcast(p: int, m: float, model: CommModel) -> int:
+    """Analytic optimum of (n-1+q)(alpha + beta*m/n) over n.
+
+    d/dn [ (n-1+q) (alpha + beta m / n) ] = 0 gives
+    n* = sqrt((q-1) * beta * m / alpha); the paper's practical rule uses
+    block size F*sqrt(m/q), i.e. n ~ sqrt(m*q)/F.  We return the analytic
+    optimum clamped to [1, m].
+    """
+    if p == 1:
+        return 1
+    q = ceil_log2(p)
+    if m <= 1:
+        return 1
+    n = math.sqrt(max(q - 1, 1) * model.beta * m / model.alpha)
+    return max(1, min(int(round(n)), int(m)))
+
+
+def optimal_num_blocks_allgather(p: int, m: float, model: CommModel) -> int:
+    """Analytic optimum for the circulant allgather block count."""
+    if p == 1:
+        return 1
+    q = ceil_log2(p)
+    mb = m * (p - 1) / p  # bytes moved per full sweep
+    if mb <= 1:
+        return 1
+    n = math.sqrt(max(q - 1, 1) * model.beta * mb / model.alpha)
+    return max(1, min(int(round(n)), max(1, int(m / p))))

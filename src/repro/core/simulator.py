@@ -1,0 +1,218 @@
+"""Round-based message-passing simulator for Algorithm 1 and Algorithm 2.
+
+Executes the paper's broadcast / all-to-all broadcast algorithms over a
+simulated fully-connected, one-ported, bidirectional network and checks
+that after exactly n-1+q rounds every processor holds every block.  This
+is the end-to-end functional oracle for the schedule constructions (and
+doubles as a latency/volume counter for the benchmark cost models).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .schedule import (
+    ceil_log2,
+    compute_skips,
+    num_rounds,
+    recv_schedule,
+    send_schedule,
+    virtual_rounds,
+)
+
+__all__ = ["simulate_broadcast", "simulate_allgather", "SimResult"]
+
+
+@dataclass
+class SimResult:
+    rounds: int                      # actual communication rounds executed
+    optimal_rounds: int              # n - 1 + ceil(log2 p)
+    messages: int = 0                # point-to-point messages sent
+    blocks_moved: int = 0            # total blocks transferred
+    buffers: Optional[list] = None   # final per-processor buffers
+
+
+def _adjusted_schedules(p: int, n: int):
+    """Per-rank recv/send schedules with the x virtual rounds folded in
+    (the two adjustment loops at the top of Algorithm 1)."""
+    q = ceil_log2(p)
+    skip = compute_skips(p)
+    x = virtual_rounds(p, n)
+    recv, send = [], []
+    for r in range(p):
+        rb = recv_schedule(p, r, skip)
+        sb = send_schedule(p, r, skip)
+        for i in range(q):
+            if i < x:
+                rb[i] += q - x
+                sb[i] += q - x
+            else:
+                rb[i] -= x
+                sb[i] -= x
+        recv.append(rb)
+        send.append(sb)
+    return recv, send, x
+
+
+def simulate_broadcast(p: int, n: int, root: int = 0, keep_buffers: bool = False) -> SimResult:
+    """Algorithm 1: broadcast n blocks from ``root`` to all p processors.
+
+    Simulates all rounds; asserts the final state is complete.  Block
+    payloads are (block_index,) tuples so content errors are caught, not
+    just counts.  Rank renumbering handles root != 0 (paper §2.1).
+    """
+    q = ceil_log2(p)
+    skip = compute_skips(p)
+    recv, send, x = _adjusted_schedules(p, n)
+
+    # buffer[r][j] holds the payload of block j at processor r (or None).
+    buf: List[List[Optional[int]]] = [[None] * n for _ in range(p)]
+    virt = lambda r: (r - root) % p  # renumbering: virtual rank of real rank r
+    real = lambda v: (v + root) % p
+    for j in range(n):
+        buf[root][j] = j
+
+    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n))
+    if p == 1:
+        res.buffers = buf if keep_buffers else None
+        return res
+
+    # Working copies of the per-round block indices; incremented by q after
+    # each use exactly as in Algorithm 1 (schedules indexed by virtual rank).
+    rb = [list(recv[v]) for v in range(p)]
+    sb = [list(send[v]) for v in range(p)]
+
+    for i in range(x, n + q - 1 + x):
+        k = i % q
+        # Gather the messages of this round first (synchronous round model):
+        # each VIRTUAL rank v sends buf[real(v)][sb[v][k]] to virtual (v+skip)
+        msgs: List[Tuple[int, int, Optional[int]]] = []  # (dst_real, blk, payload)
+        for v in range(p):
+            blk = sb[v][k]
+            tv = (v + skip[k]) % p
+            if blk < 0 or tv == 0:
+                continue  # nonexistent block / never send to the root
+            blk_eff = min(blk, n - 1)
+            payload = buf[real(v)][blk_eff]
+            assert payload is not None, (
+                f"p={p} n={n} round={i} k={k}: rank v={v} must send block "
+                f"{blk_eff} it does not have"
+            )
+            msgs.append((real(tv), blk_eff, payload))
+        for dst, blk, payload in msgs:
+            v = virt(dst)
+            rblk = rb[v][k]
+            assert rblk >= 0, f"receiver v={v} got unexpected block in round {i}"
+            rblk_eff = min(rblk, n - 1)
+            assert rblk_eff == blk, (
+                f"p={p} n={n} round={i}: rank v={v} expected block {rblk_eff}, "
+                f"got {blk}"
+            )
+            assert payload == blk, "payload corrupted"
+            buf[dst][blk] = payload
+            res.messages += 1
+            res.blocks_moved += 1
+        for v in range(p):
+            sb[v][k] += q
+            rb[v][k] += q
+        res.rounds += 1
+
+    for r in range(p):
+        for j in range(n):
+            assert buf[r][j] == j, f"p={p} n={n}: rank {r} missing block {j}"
+    assert res.rounds == res.optimal_rounds
+    res.buffers = buf if keep_buffers else None
+    return res
+
+
+def simulate_allgather(
+    p: int,
+    n: int,
+    sizes: Optional[List[int]] = None,
+    keep_buffers: bool = False,
+) -> SimResult:
+    """Algorithm 2: all-to-all broadcast (irregular allgather).
+
+    Every processor j contributes n blocks (of per-processor size
+    sizes[j] if given; sizes only affect the volume counter).  Verifies
+    that after n-1+q rounds every processor holds all p*n blocks.
+    """
+    q = ceil_log2(p)
+    skip = compute_skips(p)
+    recv, _, x = _adjusted_schedules(p, n)
+
+    # recvblocks[r][j][k]: schedule of rank r for root j = recv of (r-j) mod p
+    # sendblocks[r][j][k] = recvblocks[f^k][j][k] with f^k = (r - skip[k]) % p
+    # (both are realized by row rotation of the single recv table).
+
+    buf: List[List[List[Optional[Tuple[int, int]]]]] = [
+        [[None] * n for _ in range(p)] for _ in range(p)
+    ]
+    for j in range(p):
+        for blk in range(n):
+            buf[j][j][blk] = (j, blk)
+
+    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n))
+    if p == 1:
+        res.buffers = buf if keep_buffers else None
+        return res
+    if sizes is None:
+        sizes = [1] * p
+
+    # Working per-(rank, root) block counters.
+    rb = [[list(recv[(r - j) % p]) for j in range(p)] for r in range(p)]
+
+    for i in range(x, n + q - 1 + x):
+        k = i % q
+        # Pack phase: every rank sends, for every root j != t, one block.
+        round_msgs = []
+        for r in range(p):
+            t = (r + skip[k]) % p
+            payloads: Dict[int, Tuple[int, Optional[Tuple[int, int]]]] = {}
+            for j in range(p):
+                if j == t:
+                    continue  # t is root for j == t: already has it
+                # sendblocks_r[j][k] = recvblocks[(j - skip[k]) mod p][k]
+                #                    = recv_schedule((r - j + skip[k]) mod p)[k]
+                # i.e. exactly what the to-processor t expects for root j.
+                blk = rb[t][j][k]  # == sendblocks[r][j][k] (lockstep counters)
+                if blk < 0:
+                    continue
+                blk_eff = min(blk, n - 1)
+                payload = buf[r][j][blk_eff]
+                assert payload is not None, (
+                    f"p={p} n={n} round={i}: rank {r} missing block "
+                    f"({j},{blk_eff}) to send"
+                )
+                payloads[j] = (blk_eff, payload)
+                res.blocks_moved += 1
+            round_msgs.append((r, t, payloads))
+            res.messages += 1
+        # Unpack phase.
+        for r, t, payloads in round_msgs:
+            for j, (blk, payload) in payloads.items():
+                if j == t:
+                    continue
+                rblk = rb[t][j][k]
+                rblk_eff = min(rblk, n - 1)
+                assert rblk >= 0 and rblk_eff == blk, (
+                    f"p={p} n={n} round={i}: root {j} rank {t} expected "
+                    f"{rblk}, got {blk}"
+                )
+                assert payload == (j, blk)
+                buf[t][j][blk] = payload
+        for r in range(p):
+            for j in range(p):
+                rb[r][j][k] += q
+        res.rounds += 1
+
+    for r in range(p):
+        for j in range(p):
+            for blk in range(n):
+                assert buf[r][j][blk] == (j, blk), (
+                    f"p={p} n={n}: rank {r} missing block ({j},{blk})"
+                )
+    assert res.rounds == res.optimal_rounds
+    res.buffers = buf if keep_buffers else None
+    return res

@@ -1,0 +1,94 @@
+"""Verification of the four schedule correctness conditions (paper §2.1).
+
+These conditions are the unambiguous ground truth for any schedule
+construction:
+
+  1. recvblock[k]_r == sendblock[k]_{f_r^k}  (block received is the block
+     sent by the from-processor),
+  2. sendblock[k]_r == recvblock[k]_{t_r^k}  (equivalent formulation),
+  3. over q rounds every processor receives q different blocks:
+     union_k recvblock[k] == ({-1..-q} \\ {b-q}) u {b} where b is the
+     processor's baseblock (for the root, b = q and all entries negative),
+  4. every sent block was received in an earlier round, or is the
+     baseblock from the previous phase: sendblock[k] == recvblock[j] for
+     some j < k, or sendblock[k] == b - q.
+
+``verify_schedules`` checks all four for every processor and raises
+AssertionError with a precise message on the first failure.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from .schedule import baseblock, ceil_log2, compute_skips
+
+__all__ = ["verify_schedules", "verify_p", "check_condition_3", "check_condition_4"]
+
+
+def check_condition_3(recv: Sequence[int], b: int, q: int) -> bool:
+    """Condition 3 for one processor with baseblock b."""
+    expect = set(range(-q, 0))
+    if b < q:  # non-root: b replaces b-q
+        expect.discard(b - q)
+        expect.add(b)
+    # root (b == q): all negative, the full set {-1..-q}
+    return set(recv) == expect and len(set(recv)) == q
+
+
+def check_condition_4(recv: Sequence[int], send: Sequence[int], b: int, q: int) -> bool:
+    """Condition 4 for one (non-root) processor with baseblock b."""
+    if send and send[0] != b - q:
+        return False
+    for k in range(q):
+        if send[k] == b - q:
+            continue
+        if not any(send[k] == recv[j] for j in range(k)):
+            return False
+    return True
+
+
+def verify_schedules(
+    p: int,
+    recv: Sequence[Sequence[int]],
+    send: Sequence[Sequence[int]],
+) -> None:
+    """Check all four correctness conditions for all p processors."""
+    q = ceil_log2(p)
+    skip = compute_skips(p)
+    for r in range(p):
+        b = baseblock(r, skip, q)
+        # Condition 3
+        assert check_condition_3(recv[r], b, q), (
+            f"cond3 failed p={p} r={r}: recv={list(recv[r])} b={b}"
+        )
+        for k in range(q):
+            t = (r + skip[k]) % p
+            f = (r - skip[k] + p) % p
+            # Conditions 1 & 2 (equivalent; check both directions)
+            assert send[r][k] == recv[t][k], (
+                f"cond2 failed p={p} r={r} k={k}: send={send[r][k]} "
+                f"recv[t={t}]={recv[t][k]}"
+            )
+            assert recv[r][k] == send[f][k], (
+                f"cond1 failed p={p} r={r} k={k}: recv={recv[r][k]} "
+                f"send[f={f}]={send[f][k]}"
+            )
+        # Condition 4 (non-root only; the root sends blocks 0..q-1)
+        if r == 0:
+            assert list(send[r]) == list(range(q)), (
+                f"root send schedule must be 0..q-1, got {list(send[r])}"
+            )
+        else:
+            assert check_condition_4(recv[r], send[r], b, q), (
+                f"cond4 failed p={p} r={r}: recv={list(recv[r])} "
+                f"send={list(send[r])} b={b}"
+            )
+
+
+def verify_p(p: int) -> None:
+    """Compute schedules with the O(log p) algorithms and verify them."""
+    from .schedule import schedule_tables
+
+    recv, send = schedule_tables(p)
+    verify_schedules(p, recv, send)

@@ -1,0 +1,81 @@
+"""Schedule-driven block pack/unpack Pallas kernels (paper Algorithm 2).
+
+The all-to-all broadcast packs, per round, one block per root processor
+into a contiguous message: ``tempin[j'] = buffers[j][sendblocks[j][k]]``.
+On TPU this is a gather whose indices are the *schedule* -- known before
+the kernel runs but data-dependent per rank.  PrefetchScalarGridSpec
+passes the index vector as a scalar-prefetch argument so the BlockSpec
+index_map can select which HBM block to DMA into VMEM: the pack becomes
+pure DMA scheduling, zero compute, exactly matching the paper's
+"packing ... bounded by the total size of all buffers" requirement.
+
+``block_unpack`` is the inverse scatter (tempout -> buffers[recvblock]).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pack_kernel(idx_ref, buf_ref, out_ref):
+    # the interesting work happened in the index_map DMA; just copy VMEM->VMEM
+    out_ref[...] = buf_ref[0]
+
+
+def block_pack(buffers: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = True):
+    """buffers: [R, nslots, bs]; idx: [R] int32 slot per row -> [R, bs].
+
+    Row r of the output is buffers[r, idx[r]]; the slot choice is the
+    send schedule for the round.
+    """
+    R, nslots, bs = buffers.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, 1, bs), lambda r, idx_ref: (r, idx_ref[r], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs), lambda r, idx_ref: (r, 0)),
+    )
+    return pl.pallas_call(
+        _pack_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, bs), buffers.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), buffers)
+
+
+def _unpack_kernel(idx_ref, msg_ref, buf_ref, out_ref):
+    del buf_ref  # aliased with the output; untouched slots keep contents
+    out_ref[0] = msg_ref[...]
+
+
+def block_unpack(buffers: jnp.ndarray, msg: jnp.ndarray, idx: jnp.ndarray,
+                 *, interpret: bool = True):
+    """Scatter msg rows into per-row slots: buffers[r, idx[r]] = msg[r].
+
+    Implemented with an input-output alias so untouched slots keep their
+    contents (the receive schedule only writes one slot per round).
+    """
+    R, nslots, bs = buffers.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda r, idx_ref: (r, 0)),
+            pl.BlockSpec((1, 1, bs), lambda r, idx_ref: (r, idx_ref[r], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bs), lambda r, idx_ref: (r, idx_ref[r], 0)),
+    )
+    return pl.pallas_call(
+        _unpack_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
+        input_output_aliases={2: 0},   # buffers (3rd operand) -> output
+        interpret=interpret,
+    )(idx.astype(jnp.int32), msg, buffers)

@@ -1,0 +1,148 @@
+"""Pallas TPU flash-attention kernel (forward).
+
+Grid: (batch*heads, n_q_blocks, n_kv_blocks); the last grid dim is
+sequential on TPU, so the online-softmax running state (m, l, acc) lives
+in VMEM scratch across kv steps.  BlockSpecs tile q/k/v into VMEM blocks
+of (block_q x head_dim) / (block_k x head_dim) -- MXU-aligned when
+block_* are multiples of 128 (pad head_dim outside, see ops.py).
+
+GQA is handled in ops.py by flattening query heads and repeating the kv
+head index in the k/v index_map (no data duplication: the same kv block
+is DMA'd for each of the `rep` query heads of a group).  Causal +
+sliding-window masks are applied in-block; blocks entirely above the
+diagonal are skipped with pl.when.
+
+Validated in interpret mode against ref.py (pure-jnp oracle) across
+shape/dtype sweeps in tests/test_kernels.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int, n_kv: int,
+               causal: bool, window: Optional[int], seq_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                     # [bq, hd]
+        k = k_ref[0].astype(jnp.float32)                     # [bk, hd]
+        v = v_ref[0].astype(jnp.float32)                     # [bk, hdv]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                            # [bq, bk]
+        mask = k_pos < seq_kv
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+            if window is not None:
+                mask = mask & (q_pos - k_pos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                               # [bq, bk]
+        l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        # skip blocks entirely above the diagonal
+        pl.when(k_start <= q_start + block_q - 1)(compute)
+    else:
+        compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jnp.ndarray,                       # [BH, Sq, hd]
+    k: jnp.ndarray,                       # [BH, Skv, hd]  (kv head repeated
+    v: jnp.ndarray,                       #                 logically via kv_map)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+    seq_kv: Optional[int] = None,
+    kv_map: Optional[int] = None,         # GQA repeat factor (H // Hkv)
+):
+    """Flash attention over flattened heads via pl.pallas_call.
+
+    kv_map: GQA group size -- query row b reads kv row b // kv_map
+    (no repeated-kv materialization; the same kv block is DMA'd for each
+    query head of the group).
+    """
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    hd_v = v.shape[2]
+    seq_kv = Skv if seq_kv is None else seq_kv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    n_q = -(-Sq // block_q)
+    n_kv = -(-Skv // block_k)
+    if Sq % block_q:
+        q = jnp.pad(q, ((0, 0), (0, n_q * block_q - Sq), (0, 0)))
+    if Skv % block_k:
+        k = jnp.pad(k, ((0, 0), (0, n_kv * block_k - Skv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, n_kv * block_k - Skv), (0, 0)))
+    scale = 1.0 / math.sqrt(hd)
+    # GQA: query row b = batch*H + kv*rep + r maps to kv row b // rep
+    # (pure grid arithmetic -- index_maps cannot capture traced arrays)
+    rep = kv_map if isinstance(kv_map, int) and kv_map > 0 else 1
+    kv_index = lambda b, i, j: (b // rep, j, 0)
+
+    kern = functools.partial(
+        _fa_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        n_kv=n_kv, causal=causal, window=window, seq_kv=seq_kv,
+    )
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd_v), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd_v), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, n_q * block_q, hd_v), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),      # m
+            pltpu.VMEM((block_q, 1), jnp.float32),      # l
+            pltpu.VMEM((block_q, hd_v), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

@@ -1,0 +1,68 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Models call these through ``use_pallas(...)`` switches; by default the
+pure-jnp references are used (they lower everywhere, incl. the 512-device
+dry-run), while tests and TPU deployments enable the kernels.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .block_pack import block_pack, block_unpack
+from .flash_attention import flash_attention
+from .ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def gqa_flash_attention(q, k, v, *, causal=True, window=None,
+                        block_q=128, block_k=128, interpret=True):
+    """GQA wrapper: q [B, Sq, H, hd]; k/v [B, Skv, Hkv, hd(_v)].
+
+    Flattens (batch, head) onto the kernel grid; kv heads are shared via
+    the kernel's kv_map index (no repeat materialization).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    rep = H // Hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, hd_v)
+    # query row b*H + kv*rep + r reads kv row (b*H + kv*rep + r) // rep
+    of = flash_attention(
+        qf, kf, vf, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, interpret=interpret, kv_map=rep,
+    )
+    return of.reshape(B, H, Sq, hd_v).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba2_ssd(x, B_, C_, dt, A_log, D, *, chunk=64, interpret=True):
+    """x: [B, S, H, P]; B_/C_: [B, S, G, N]; dt: [B, S, H]; A_log/D: [H]."""
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    xf = x.transpose(0, 2, 1, 3).reshape(Bsz * H, S, P)
+    Bh = jnp.repeat(B_, rep, axis=2).transpose(0, 2, 1, 3).reshape(Bsz * H, S, N)
+    Ch = jnp.repeat(C_, rep, axis=2).transpose(0, 2, 1, 3).reshape(Bsz * H, S, N)
+    dtf = dt.transpose(0, 2, 1).reshape(Bsz * H, S)
+    alog = jnp.tile(A_log, Bsz)
+    d = jnp.tile(D, Bsz)
+    yf = ssd_scan(xf, Bh, Ch, dtf, alog, d, chunk=chunk, interpret=interpret)
+    return yf.reshape(Bsz, H, S, P).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def schedule_pack(buffers, idx, *, interpret=True):
+    return block_pack(buffers, idx, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def schedule_unpack(buffers, msg, idx, *, interpret=True):
+    return block_unpack(buffers, msg, idx, interpret=interpret)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None):
+    """Naive attention.  q: [BH, Sq, hd]; k/v: [BH, Skv, hd(_v)]."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(q.shape[-1])
+    qi = jnp.arange(q.shape[1])[:, None]
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask = mask & (kj <= qi)
+        if window is not None:
+            mask = mask & (qi - kj < window)
+    s = jnp.where(mask[None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def block_pack_ref(buffers, idx):
+    """buffers: [R, nslots, bs]; idx: [R] int32 -> packed [R, bs]."""
+    return jnp.take_along_axis(buffers, idx[:, None, None], axis=1)[:, 0]
+
+
+def block_unpack_ref(buffers, msg, idx):
+    """Scatter msg rows into buffers at per-row slots."""
+    return buffers.at[jnp.arange(buffers.shape[0]), idx].set(msg)
+
+
+def ssd_ref(x, B_, C_, dt, A_log, D):
+    """Sequential SSD recurrence oracle.  x: [BH, S, P]; B_/C_: [BH, S, N];
+    dt: [BH, S]; A_log/D: scalars per row [BH]."""
+    A = -jnp.exp(A_log)                                        # [BH]
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp                                  # [BH,P],[BH,N],[BH,N],[BH]
+        a = jnp.exp(dtt * A)
+        s = s * a[:, None, None] + dtt[:, None, None] * (
+            bt[:, :, None] * xt[:, None, :]
+        )
+        y = jnp.einsum("bn,bnp->bp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((x.shape[0], B_.shape[-1], x.shape[-1]), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(B_, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(C_, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dt, 1, 0).astype(jnp.float32)),
+    )
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + x.astype(jnp.float32) * D[:, None, None]

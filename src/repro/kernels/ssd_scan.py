@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid: (batch*heads, n_chunks); the chunk axis is sequential on TPU, so
+the inter-chunk state S in R^{N x P} lives in VMEM scratch and is carried
+across chunks (the recurrence the GPU implementation realizes with a
+separate kernel launch + global memory round-trip becomes a VMEM-resident
+carry -- the TPU-native adaptation of SSD).
+
+Per chunk of length Q the kernel computes, entirely in VMEM:
+  * da = dt * A, cum = cumsum(da) (log-decay),
+  * intra-chunk dual form: Y += ((C B^T) .* L) (dt x)  with
+    L[i,j] = exp(cum_i - cum_j) for i >= j,
+  * inter-chunk: Y += (C S_prev) .* exp(cum),
+  * state update: S = exp(cum_Q) S_prev + sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, alog_ref, d_ref, y_ref, s_scr,
+                *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, P]
+    b = b_ref[0].astype(jnp.float32)        # [Q, N]
+    c = c_ref[0].astype(jnp.float32)        # [Q, N]
+    dt = dt_ref[0].astype(jnp.float32)      # [Q, 1] (padded lane dim)
+    A = -jnp.exp(alog_ref[0].astype(jnp.float32))  # scalar [1]
+    D = d_ref[0].astype(jnp.float32)
+
+    da = dt[:, 0] * A                       # [Q]
+    cum = jnp.cumsum(da)                    # [Q]
+    # intra-chunk dual form
+    seg = cum[:, None] - cum[None, :]       # [Q, Q]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = ii >= jj
+    L = jnp.where(tri, jnp.exp(jnp.where(tri, seg, 0.0)), 0.0)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    w = cb * L * dt[:, 0][None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, P]
+    # inter-chunk contribution from carried state
+    s_prev = s_scr[...]                     # [N, P]
+    y += jax.lax.dot_general(c, s_prev, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32) * jnp.exp(cum)[:, None]
+    # state update
+    decay_to_end = jnp.exp(cum[-1] - cum) * dt[:, 0]               # [Q]
+    s_loc = jax.lax.dot_general(b * decay_to_end[:, None], x,
+                                (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [N, P]
+    s_scr[...] = s_prev * jnp.exp(cum[-1]) + s_loc
+    y_ref[0] = (y + x * D).astype(y_ref.dtype)
+
+
+def ssd_scan(x, B_, C_, dt, A_log, D, *, chunk: int = 64, interpret: bool = True):
+    """x: [BH, S, P]; B_/C_: [BH, S, N]; dt: [BH, S]; A_log/D: [BH].
+
+    Returns y: [BH, S, P] = SSD(x) + D*x, matching ref.ssd_ref.
+    """
+    BH, S, P = x.shape
+    N = B_.shape[-1]
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+    dt2 = dt[..., None]                      # [BH, S, 1] lane-padded
+    alog2 = A_log[:, None]                   # [BH, 1]
+    d2 = D[:, None]
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nc * chunk, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, B_, C_, dt2, alog2, d2)
+    return y[:, :S]

@@ -1,0 +1,133 @@
+"""Roofline-term derivation from the dry-run cell records.
+
+TPU v5e hardware constants (per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI per link       ~50 GB/s
+
+Per (arch x shape x mesh) cell, from the compiled artifact:
+    compute term   = flops_weighted / PEAK            [s]
+    memory term    = bytes_weighted / HBM_BW          [s]
+    collective term= collective_bytes / ICI_BW        [s]
+    latency term   = collective_rounds * ALPHA        [s]  (paper metric)
+
+flops_weighted / bytes_weighted / collective_bytes are PER-DEVICE with
+while-loop bodies multiplied by their trip counts (see hlo_analysis).
+The bottleneck is the max term; the roofline fraction is
+compute_term / max(all terms) -- how close the cell runs to the compute
+roofline if the dominant term were the only cost.
+
+MODEL_FLOPS = passes * N_active * tokens / devices; ratio to
+flops_weighted shows how much compiled compute is useful (catches
+remat / capacity-factor / padding waste).
+
+    PYTHONPATH=src python -m repro.launch.roofline [--mesh single] [--md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ALPHA = 1e-6       # per-round collective latency
+HBM_BYTES = 16e9   # v5e HBM capacity
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"
+)
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        d = json.load(open(path))
+        if d.get("mesh") != mesh or d.get("tag", "") != (tag or ""):
+            continue
+        out.append(d)
+    return out
+
+
+def terms(d: Dict) -> Dict:
+    if "skipped" in d:
+        return {"arch": d["arch"], "shape": d["shape"], "skipped": d["skipped"]}
+    ct = d["flops_weighted"] / PEAK_FLOPS
+    mt = d["bytes_weighted"] / HBM_BW
+    xt = d["collective_bytes"] / ICI_BW
+    lt = d["collective_rounds"] * ALPHA
+    dom = max(("compute", ct), ("memory", mt), ("collective", xt),
+              ("latency", lt), key=lambda kv: kv[1])
+    total = max(ct, mt, xt, lt)
+    return {
+        "arch": d["arch"],
+        "shape": d["shape"],
+        "compute_s": ct,
+        "memory_s": mt,
+        "collective_s": xt,
+        "latency_s": lt,
+        "bottleneck": dom[0],
+        "roofline_frac": ct / total if total else 0.0,
+        "model_flops": d["model_flops_per_device"],
+        "useful_ratio": (
+            d["model_flops_per_device"] / d["flops_weighted"]
+            if d["flops_weighted"] else 0.0
+        ),
+        "fits_hbm": d["memory"]["peak_estimate_bytes"] <= HBM_BYTES,
+        "peak_gb": d["memory"]["peak_estimate_bytes"] / 1e9,
+        "microbatches": d.get("microbatches"),
+        "tag": d.get("tag", ""),
+    }
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute | memory | collective | latency | "
+           "bottleneck | roofline frac | useful FLOPs | fits 16GB |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | -- | -- | -- | -- | "
+                f"skipped (full attention) | -- | -- | -- |"
+            )
+            continue
+        fits = "yes" if r["fits_hbm"] else f"NO ({r['peak_gb']:.0f}GB)"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{fmt_s(r['latency_s'])} | {r['bottleneck']} | "
+            f"{r['roofline_frac']*100:.0f}% | {r['useful_ratio']*100:.0f}% | "
+            f"{fits} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = [terms(d) for d in load_cells(args.mesh, args.tag)]
+    if args.md:
+        print(markdown_table(rows))
+    else:
+        for r in rows:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

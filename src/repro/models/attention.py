@@ -1,0 +1,398 @@
+"""Attention blocks: GQA (RoPE, causal, sliding-window, cross), MLA.
+
+The full-sequence paths use a blocked online-softmax formulation (pure
+jnp `lax.scan` over KV chunks, unrolled over Q chunks with a static
+lower-triangular chunk skip for causal masks).  This is simultaneously:
+  * the memory-sane lowering for 32k prefill (never materializes S x S),
+  * the oracle that kernels/flash_attention (Pallas) must match,
+  * FLOP-faithful for the roofline (causal chunk-skip avoids counting
+    the upper triangle twice).
+
+Decode paths attend a fixed-size cache with position-validity masks.
+MLA keeps the compressed c_kv cache and uses the absorbed formulation
+for decode (q is folded through W_uk so scores are computed in latent
+space), the TPU-friendly form of DeepSeek's MLA.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import MLAConfig, ModelConfig
+from .layers import apply_rope, dense_init, init_rms_norm, rms_norm
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ GQA
+
+
+def gqa_init(key, cfg: ModelConfig, dtype):
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    # keep attention head-sharded (never head-dim-sharded: a sharded hd
+    # contraction turns every score block into an all-reduce)
+    from . import hints
+    q = hints.constrain(q, "attn_q")
+    k = hints.constrain(k, "attn_kv")
+    v = hints.constrain(v, "attn_kv")
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunk_bounds(qi, q_chunk, kv_chunk, n_kv, causal, window, q_offset):
+    """Static [lo, hi) kv-chunk range visited by q chunk qi."""
+    if causal:
+        last_q = q_offset + (qi + 1) * q_chunk - 1
+        hi = min(n_kv, last_q // kv_chunk + 1)
+    else:
+        hi = n_kv
+    if window is not None and causal:
+        first_q = q_offset + qi * q_chunk
+        lo = max(0, (first_q - window + 1) // kv_chunk)
+    else:
+        lo = 0
+    return lo, max(hi, lo + 1)
+
+
+def _mask_for(q_pos, kv_pos, causal, window, Skv_true):
+    mask = (kv_pos[None, :] <= q_pos[:, None]) if causal else jnp.ones(
+        (q_pos.shape[0], kv_pos.shape[0]), bool
+    )
+    if window is not None and causal:
+        mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+    return mask & (kv_pos < Skv_true)[None, :]
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk):
+    """Online-softmax forward.  Returns (out [B,Sq,H,hd_v],
+    lse [n_q, B, Hkv, rep, qc]).  Peak memory O(chunk^2), not O(S^2)."""
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    n_q = -(-Sq // q_chunk)
+    n_kv = -(-Skv // kv_chunk)
+    qp = jnp.pad(q, ((0, 0), (0, n_q * q_chunk - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, n_kv * kv_chunk - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, n_kv * kv_chunk - Skv), (0, 0), (0, 0)))
+    kc = kp.reshape(B, n_kv, kv_chunk, Hkv, hd)
+    vc = vp.reshape(B, n_kv, kv_chunk, Hkv, hd_v)
+
+    outs, lses = [], []
+    for qi in range(n_q):
+        qb = qp[:, qi * q_chunk : (qi + 1) * q_chunk].reshape(
+            B, q_chunk, Hkv, rep, hd
+        )
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        lo, hi = _chunk_bounds(qi, q_chunk, kv_chunk, n_kv, causal, window, q_offset)
+
+        def step(carry, blk):
+            m, l, acc = carry
+            kb, vb, kv_start = blk
+            kv_pos = kv_start + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(q_pos, kv_pos, causal, window, Skv)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            pz = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + pz.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhrqk,bkhd->bhrqd", pz, vb, preferred_element_type=jnp.float32
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, rep, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, rep, q_chunk, hd_v), jnp.float32)
+        ks = jnp.moveaxis(kc[:, lo:hi], 1, 0)
+        vs = jnp.moveaxis(vc[:, lo:hi], 1, 0)
+        starts = (jnp.arange(lo, hi) * kv_chunk).astype(jnp.int32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (ks, vs, starts))
+        safe_l = jnp.maximum(l, 1e-30)
+        ob = (acc / safe_l[..., None]).astype(q.dtype)
+        outs.append(jnp.moveaxis(ob, 3, 1).reshape(B, q_chunk, H, hd_v))
+        lses.append(m + jnp.log(safe_l))                  # [B,Hkv,rep,qc]
+    out = jnp.concatenate(outs, axis=1)[:, :Sq]
+    return out, jnp.stack(lses)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def blocked_attention(q, k, v, causal, window=None, q_offset=0,
+                      q_chunk=1024, kv_chunk=1024):
+    """Flash-style blocked attention with an O(S)-memory custom VJP.
+
+    q: [B, Sq, H, hd]; k/v: [B, Skv, Hkv, hd(_v)]; GQA head h attends kv
+    head h // (H // Hkv).  Causal: q position i sees kv j iff
+    j <= i + q_offset (and i + q_offset - j < window for SWA).  The
+    backward pass recomputes scores chunk-by-chunk from the saved
+    (q, k, v, o, lse) -- the flash-attention recipe, and the oracle the
+    Pallas kernel must match.
+    """
+    q_chunk = min(q_chunk, q.shape[1])
+    kv_chunk = min(kv_chunk, k.shape[1])
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk)
+    return out
+
+
+def _ba_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk):
+    q_chunk = min(q_chunk, q.shape[1])
+    kv_chunk = min(kv_chunk, k.shape[1])
+    out, lse = _flash_fwd(q, k, v, causal, window, q_offset, q_chunk, kv_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _ba_bwd(causal, window, q_offset, q_chunk, kv_chunk, res, do):
+    q, k, v, o, lse = res
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    rep = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    n_q = -(-Sq // q_chunk)
+    n_kv = -(-Skv // kv_chunk)
+    qp = jnp.pad(q, ((0, 0), (0, n_q * q_chunk - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, n_kv * kv_chunk - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, n_kv * kv_chunk - Skv), (0, 0), (0, 0)))
+    dop = jnp.pad(do, ((0, 0), (0, n_q * q_chunk - Sq), (0, 0), (0, 0)))
+    op = jnp.pad(o, ((0, 0), (0, n_q * q_chunk - Sq), (0, 0), (0, 0)))
+    kc = kp.reshape(B, n_kv, kv_chunk, Hkv, hd)
+    vc = vp.reshape(B, n_kv, kv_chunk, Hkv, hd_v)
+
+    dq = jnp.zeros((B, n_q * q_chunk, Hkv, rep, hd), jnp.float32)
+    dk = jnp.zeros((B, n_kv, kv_chunk, Hkv, hd), jnp.float32)
+    dv = jnp.zeros((B, n_kv, kv_chunk, Hkv, hd_v), jnp.float32)
+
+    for qi in range(n_q):
+        sl = slice(qi * q_chunk, (qi + 1) * q_chunk)
+        qb = qp[:, sl].reshape(B, q_chunk, Hkv, rep, hd)
+        dob = dop[:, sl].reshape(B, q_chunk, Hkv, rep, hd_v)
+        ob = op[:, sl].reshape(B, q_chunk, Hkv, rep, hd_v)
+        lse_i = lse[qi]                                     # [B,Hkv,rep,qc]
+        # D = rowsum(do * o)
+        Dc = jnp.einsum("bqhrd,bqhrd->bhrq", dob.astype(jnp.float32),
+                        ob.astype(jnp.float32))
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+        lo, hi = _chunk_bounds(qi, q_chunk, kv_chunk, n_kv, causal, window, q_offset)
+
+        def step(carry, blk):
+            dq_i, dk_all, dv_all = carry
+            kb, vb, j = blk                                 # j: kv chunk idx
+            kv_pos = j * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhrd,bkhd->bhrqk", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _mask_for(q_pos, kv_pos, causal, window, Skv)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])               # [B,Hkv,rep,qc,kc]
+            dpv = jnp.einsum("bqhrd,bkhd->bhrqk", dob.astype(jnp.float32), vb,
+                             preferred_element_type=jnp.float32)
+            ds = p * (dpv - Dc[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhrqk,bkhd->bqhrd", ds, kb,
+                                     preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bhrqk,bqhrd->bkhd", ds, qb.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            dv_j = jnp.einsum("bhrqk,bqhrd->bkhd", p, dob.astype(jnp.float32),
+                              preferred_element_type=jnp.float32)
+            dk_all = jax.lax.dynamic_update_index_in_dim(
+                dk_all, jax.lax.dynamic_index_in_dim(dk_all, j, 1, keepdims=False) + dk_j,
+                j, 1)
+            dv_all = jax.lax.dynamic_update_index_in_dim(
+                dv_all, jax.lax.dynamic_index_in_dim(dv_all, j, 1, keepdims=False) + dv_j,
+                j, 1)
+            return (dq_i, dk_all, dv_all), None
+
+        dq_i0 = jnp.zeros((B, q_chunk, Hkv, rep, hd), jnp.float32)
+        ks = jnp.moveaxis(kc[:, lo:hi], 1, 0)
+        vs = jnp.moveaxis(vc[:, lo:hi], 1, 0)
+        idxs = jnp.arange(lo, hi, dtype=jnp.int32)
+        (dq_i, dk, dv), _ = jax.lax.scan(step, (dq_i0, dk, dv), (ks, vs, idxs))
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, dq_i, qi * q_chunk, axis=1)
+
+    dq = dq.reshape(B, n_q * q_chunk, H, hd)[:, :Sq].astype(q.dtype)
+    dk = dk.reshape(B, n_kv * kv_chunk, Hkv, hd)[:, :Skv].astype(k.dtype)
+    dv = dv.reshape(B, n_kv * kv_chunk, Hkv, hd_v)[:, :Skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+blocked_attention.defvjp(_ba_fwd, _ba_bwd)
+
+
+def gqa_full(p, x, cfg: ModelConfig, positions, *, causal=True):
+    """Train/prefill self-attention; returns ([B,S,d], (k, v) for caching)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = blocked_attention(q, k, v, causal, cfg.sliding_window)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    return o, (k, v)
+
+
+def gqa_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos):
+    """One-token decode.  x: [B, 1, d]; cache_[kv]: [B, S, Hkv, hd];
+    pos: [B] int32 per-slot positions (continuous batching) or scalar.
+    Returns (out, cache_k, cache_v).
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    S = cache_k.shape[1]
+    pos = jnp.broadcast_to(pos, (B,))
+    positions = pos[:, None]
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+    rep = cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(B, 1, cfg.n_kv_heads, rep, hd)
+    s = jnp.einsum(
+        "bqhrd,bkhd->bhrqk", qh, cache_k, preferred_element_type=jnp.float32
+    ) / math.sqrt(hd)
+    idx = jnp.arange(S)
+    mask = idx[None, :] <= pos[:, None]                     # [B, S]
+    if cfg.sliding_window is not None:
+        mask = mask & (pos[:, None] - idx[None, :] < cfg.sliding_window)
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", w, cache_v, preferred_element_type=jnp.float32)
+    o = o.astype(x.dtype).reshape(B, 1, cfg.n_heads * hd) @ p["wo"]
+    return o, cache_k, cache_v
+
+
+def cross_attn_init(key, cfg: ModelConfig, dtype, kv_dim: Optional[int] = None):
+    hd = cfg.hd
+    kv_dim = kv_dim or cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], kv_dim, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], kv_dim, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+
+
+def cross_attn_apply(p, x, memory, cfg: ModelConfig):
+    """x: [B, S, d] queries; memory: [B, T, d_kv] keys/values (no RoPE)."""
+    B, S, _ = x.shape
+    T = memory.shape[1]
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (memory @ p["wk"]).reshape(B, T, cfg.n_kv_heads, hd)
+    v = (memory @ p["wv"]).reshape(B, T, cfg.n_kv_heads, hd)
+    o = blocked_attention(q, k, v, False)
+    return o.reshape(B, S, cfg.n_heads * hd) @ p["wo"]
+
+
+# ------------------------------------------------------------------ MLA
+
+
+def mla_init(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_norm": init_rms_norm(m.q_lora_rank),
+        "w_uq": dense_init(ks[1], m.q_lora_rank, H * (m.qk_nope_dim + m.qk_rope_dim), dtype),
+        "w_dkv": dense_init(ks[2], d, m.kv_lora_rank, dtype),
+        "kv_norm": init_rms_norm(m.kv_lora_rank),
+        "w_kr": dense_init(ks[3], d, m.qk_rope_dim, dtype),
+        "w_uk": dense_init(ks[4], m.kv_lora_rank, H * m.qk_nope_dim, dtype),
+        "w_uv": dense_init(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype),
+        "wo": dense_init(ks[6], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    qall = (cq @ p["w_uq"]).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = qall[..., : m.qk_nope_dim], qall[..., m.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_full(p, x, cfg: ModelConfig, positions, *, causal=True):
+    """Materialized MLA for train/prefill; returns (out, (c_kv, k_rope))."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)       # [B,S,r]
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, m.qk_nope_dim)
+    vfull = (c_kv @ p["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_dim))], axis=-1)
+    o = blocked_attention(q, k, vfull, causal)
+    o = o.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    return o, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache_ckv, cache_kr, pos):
+    """Absorbed-form MLA decode with the compressed cache.
+
+    cache_ckv: [B, S, r]; cache_kr: [B, S, rope_dim].  Scores are computed
+    in latent space: q_lat = q_nope @ W_uk (per head), so per-token work is
+    O(H*(nope*r)) + O(S*(r + rope)) instead of materializing K/V.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    S = cache_ckv.shape[1]
+    pos = jnp.broadcast_to(pos, (B,))
+    positions = pos[:, None]
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)   # [B,1,H,*]
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    bidx = jnp.arange(B)
+    cache_ckv = cache_ckv.at[bidx, pos].set(c_kv[:, 0].astype(cache_ckv.dtype))
+    cache_kr = cache_kr.at[bidx, pos].set(k_rope[:, 0].astype(cache_kr.dtype))
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)              # absorb W_uk
+    s = jnp.einsum("bqhr,bkr->bhqk", q_lat, cache_ckv, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqhn,bkn->bhqk", q_rope, cache_kr, preferred_element_type=jnp.float32)
+    s = s / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    mask = jnp.arange(S)[None, :] <= pos[:, None]           # [B, S]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", w, cache_ckv, preferred_element_type=jnp.float32)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhv->bqhv", o_lat.astype(x.dtype), w_uv)
+    o = o.reshape(B, 1, H * m.v_head_dim) @ p["wo"]
+    return o, cache_ckv, cache_kr

@@ -1,0 +1,30 @@
+"""Launcher-set sharding hints for activations (no-op when unset).
+
+Keeps model code mesh-agnostic: the launcher (dryrun/train) sets the
+PartitionSpecs once; `constrain` applies them inside jit when a mesh
+context is active, and silently no-ops otherwise (CPU tests).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_SPECS = {}
+
+
+def set_hint(name: str, spec):
+    _SPECS[name] = spec
+
+
+def clear_hints():
+    _SPECS.clear()
+
+
+def constrain(x, name: str):
+    spec = _SPECS.get(name)
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

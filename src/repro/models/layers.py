@@ -1,0 +1,142 @@
+"""Primitive layers: norms, MLPs, embeddings, RoPE.  Pure-functional params
+as nested dicts; initializers return (params, apply) separation kept simple:
+init_* builds params, apply functions take (params, x)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def init_rms_norm(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def swiglu_init(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, f, dtype),
+        "w_up": dense_init(k2, d, f, dtype),
+        "w_down": dense_init(k3, f, d, dtype),
+    }
+
+
+def swiglu_apply(p, x):
+    g = jax.nn.silu(x @ p["w_gate"])
+    u = x @ p["w_up"]
+    return (g * u) @ p["w_down"]
+
+
+def gelu_mlp_init(key, d: int, f: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, f, dtype), "w_out": dense_init(k2, f, d, dtype)}
+
+
+def gelu_mlp_apply(p, x):
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------- embeddings
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed_apply(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed_apply(table: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [..., d] -> logits [..., vocab]; table: [vocab, d]."""
+    return x @ table.T
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, ignore: int = -100):
+    """Mean CE over non-ignored positions.  logits [..., V], labels [...]."""
+    mask = (labels != ignore).astype(jnp.float32)
+    labels = jnp.where(labels == ignore, 0, labels)
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_softmax_xent(hidden: jnp.ndarray, table: jnp.ndarray,
+                         labels: jnp.ndarray, ignore: int = -100,
+                         chunk: int = 512):
+    """Memory-sane LM-head cross entropy.
+
+    Never materializes the full [B, S, V] logits: scans over sequence
+    chunks, computing each chunk's logits (hidden_chunk @ table.T, kept
+    vocab-sharded via the 'logits' hint), reducing to per-chunk nll sums.
+    The chunk body is checkpointed so the backward pass recomputes the
+    chunk logits instead of saving them -- peak logits memory is
+    [B, chunk, V] / model_parallel instead of [B, S, V].
+    """
+    from . import hints
+
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=ignore)
+    hc = jnp.moveaxis(hidden.reshape(B, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, cnt = carry
+        h, l = xs                                   # [B, chunk, d], [B, chunk]
+        logits = hints.constrain(h @ table.T, "logits")
+        mask = (l != ignore).astype(jnp.float32)
+        lsafe = jnp.where(l == ignore, 0, l)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(
+            logits.astype(jnp.float32), lsafe[..., None], axis=-1
+        )[..., 0]
+        nll = (lse - gold) * mask
+        return (nll_sum + nll.sum(), cnt + mask.sum()), None
+
+    (nll_sum, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), (hc, lc)
+    )
+    return nll_sum / jnp.maximum(cnt, 1.0)

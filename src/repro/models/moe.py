@@ -1,0 +1,126 @@
+"""Mixture-of-Experts block: top-k routing with capacity-based dispatch.
+
+Dispatch is scatter-based (not dense one-hot einsum) so the compiled
+FLOPs are proportional to *active* parameters -- essential for an honest
+MoE roofline.  Experts live on the 'model' mesh axis (expert parallelism):
+the token buffer [E, C, d] carries a sharding constraint on E, the expert
+matmuls are fully local, and the combine is a weighted gather (GSPMD
+inserts the reduce over the model axis, which is the same psum a TP FFN
+needs).  Shared experts (DeepSeek-style) are plain SwiGLU MLPs applied to
+every token.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import dense_init
+
+try:  # sharding constraint helper (no-op outside jit/mesh contexts)
+    from jax.sharding import PartitionSpec as P
+
+    def _constrain(x, spec):
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except Exception:
+            return x
+except Exception:  # pragma: no cover
+    def _constrain(x, spec):
+        return x
+
+
+_DEFAULT_EP_SPEC = None
+
+
+def set_default_ep_spec(spec):
+    """Expert-parallel sharding hint for the [E, C, d] dispatch buffer
+    (set by the launcher; None disables the constraint)."""
+    global _DEFAULT_EP_SPEC
+    _DEFAULT_EP_SPEC = spec
+
+
+def moe_init(key, cfg: ModelConfig, dtype):
+    mo = cfg.moe
+    d, f = cfg.d_model, mo.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, mo.n_experts, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (mo.n_experts, d, f), jnp.float32) / d**0.5).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (mo.n_experts, d, f), jnp.float32) / d**0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (mo.n_experts, f, d), jnp.float32) / f**0.5).astype(dtype),
+    }
+    if mo.n_shared:
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        fs = f * mo.n_shared
+        p["shared"] = {
+            "w_gate": dense_init(kg, d, fs, dtype),
+            "w_up": dense_init(ku, d, fs, dtype),
+            "w_down": dense_init(kd, fs, d, dtype),
+        }
+    return p
+
+
+def moe_apply(p, x, cfg: ModelConfig, ep_spec: Optional[object] = None):
+    """x: [B, S, d] -> [B, S, d].  Returns (out, aux_loss)."""
+    mo = cfg.moe
+    if ep_spec is None:
+        ep_spec = _DEFAULT_EP_SPEC
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, K = mo.n_experts, mo.top_k
+    C = max(1, int(T * K * mo.capacity_factor / E))
+
+    logits = (xt.astype(jnp.float32) @ p["router"])           # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (t, k) slot within its expert, sort-based: O(T*K)
+    # memory (a [T*K, E] one-hot cumsum would be 30+ GB at deepseek scale)
+    flat_e = expert_idx.reshape(-1)                            # [T*K]
+    TK = flat_e.shape[0]
+    order = jnp.argsort(flat_e)                                # stable
+    se = flat_e[order]
+    first = jnp.searchsorted(se, jnp.arange(E), side="left")   # [E]
+    pos_sorted = jnp.arange(TK) - first[se]
+    pos = jnp.zeros((TK,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < C
+
+    # scatter tokens into the expert buffer [E, C, d] (drop on overflow)
+    xe = jnp.repeat(xt, K, axis=0)                             # [T*K, d]
+    safe_pos = jnp.where(keep, pos, C - 1)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[flat_e, safe_pos].add(
+        jnp.where(keep[:, None], xe, 0).astype(x.dtype), mode="drop"
+    )
+    if ep_spec is not None:
+        buf = _constrain(buf, ep_spec)
+
+    # expert SwiGLU, batched over E (local under EP sharding of dim 0)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"])         # [E, C, d]
+    if ep_spec is not None:
+        y = _constrain(y, ep_spec)
+
+    # combine: gather each slot's output, weight by its gate
+    ye = y[flat_e, safe_pos]                                   # [T*K, d]
+    ye = ye * (gate_vals.reshape(-1)[:, None] * keep[:, None]).astype(y.dtype)
+    out = ye.reshape(T, K, d).sum(axis=1)
+
+    if mo.n_shared:
+        sh = p["shared"]
+        g = jax.nn.silu(xt @ sh["w_gate"])
+        u = xt @ sh["w_up"]
+        out = out + (g * u) @ sh["w_down"]
+    return out.reshape(B, S, d).astype(x.dtype), aux

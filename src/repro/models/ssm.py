@@ -1,0 +1,217 @@
+"""Mamba2 / SSD (state-space duality) block, chunked scan formulation.
+
+Follows Dao & Gu (arXiv:2405.21060): per head h with scalar decay
+a_t = exp(dt_t * A_h), state S in R^{N x P}:
+
+    S_t = a_t S_{t-1} + dt_t B_t x_t^T ,   y_t = C_t^T S_t + D_h x_t
+
+The chunked algorithm splits the sequence into chunks of length Q,
+computes the intra-chunk quadratic (dual) form, carries inter-chunk
+states with a `lax.scan`, and adds the inter-chunk contribution.  The
+single-token recurrence (`ssd_decode_step`) is the O(1)-per-token decode
+path; the depthwise conv frontend keeps a (d_conv-1)-deep state.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig
+from .layers import dense_init, init_rms_norm, rms_norm
+
+
+def ssm_init(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # projects to [z (gate), x, B, C, dt]
+        "in_proj": dense_init(
+            ks[0], d, 2 * d_in + 2 * s.n_groups * s.d_state + nh, dtype
+        ),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": init_rms_norm(d_in),
+        "out_proj": dense_init(ks[3], d_in, d, dtype),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    gs = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * gs], axis=-1)
+    return z, xbc, dt, d_in, nh, gs
+
+
+def _causal_conv(xbc, w, b, conv_state=None):
+    """Depthwise causal conv along seq.  xbc: [B, S, Cch]; w: [K, Cch]."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = conv_state  # [B, K-1, Cch]
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1) :] if K > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, B_, C_, dt, A_log, D, chunk: int):
+    """Chunked SSD scan.
+
+    x:  [B, S, H, P]   (values)
+    B_: [B, S, G, N]   (input projections; broadcast over H//G heads)
+    C_: [B, S, G, N]
+    dt: [B, S, H]      (positive step sizes)
+    Returns y: [B, S, H, P].
+    """
+    Bsz, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    A = -jnp.exp(A_log)                                   # [H] negative
+    xc = x.reshape(Bsz, nc, Q, H, Pd)
+    Bc = B_.reshape(Bsz, nc, Q, G, N)
+    Cc = C_.reshape(Bsz, nc, Q, G, N)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    da = dtc * A                                          # [B,nc,Q,H] log-decay
+    cum = jnp.cumsum(da, axis=2)                          # within-chunk cumsum
+    # intra-chunk dual form: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # [B,nc,Q,Q,H]
+    ii = jnp.arange(Q)
+    tri = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    # clamp BEFORE exp: masked (i < j) entries have seg > 0 and would
+    # overflow to +inf, which turns into NaN in the backward (inf * 0)
+    seg = jnp.where(tri, seg, 0.0)
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+    # scores[b,c,i,j,h] = C_i . B_j (broadcast G->H)
+    Bh = jnp.repeat(Bc, rep, axis=3)                      # [B,nc,Q,H,N]
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    cb = jnp.einsum("bcihn,bcjhn->bcijh", Ch, Bh)
+    w = cb * Lmat * dtc[:, :, None, :, :]                 # weight by dt_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xc)
+    # chunk-final states: S_c = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # [B,nc,Q,H]
+    sloc = jnp.einsum(
+        "bcjh,bcjhn,bcjhp->bchnp", decay_to_end * dtc, Bh, xc
+    )                                                     # [B,nc,H,N,P]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # [B,nc,H]
+
+    def scan_fn(s_prev, inp):
+        sl, cd = inp                                      # [B,H,N,P], [B,H]
+        s_new = s_prev * cd[:, :, None, None] + sl
+        return s_new, s_prev
+
+    s0 = jnp.zeros((Bsz, H, N, Pd), x.dtype)
+    _, s_prevs = jax.lax.scan(
+        scan_fn,
+        s0,
+        (jnp.moveaxis(sloc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                 # [B,nc,H,N,P] state entering chunk
+    # inter-chunk: y_i += C_i . (exp(cum_i) * S_prev)
+    decay_from_start = jnp.exp(cum)                       # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp", Ch, s_prevs) * decay_from_start[..., None]
+    y = (y_intra + y_inter).reshape(Bsz, nc * Q, H, Pd)
+    y = y + x.reshape(Bsz, nc * Q, H, Pd) * D[None, None, :, None]
+    return y[:, :S] if pad else y
+
+
+def ssm_block(p, x, cfg: ModelConfig, conv_state=None, ssd_state=None, pos=None):
+    """Full-sequence Mamba2 block.  x: [B, S, d] -> [B, S, d].
+
+    If conv_state/ssd_state given (decode), S must be 1 and the recurrent
+    path is used; returns (y, new_conv_state, new_ssd_state).
+    """
+    s = cfg.ssm
+    B, S, d = x.shape
+    proj = x @ p["in_proj"]
+    z, xbc, dt, d_in, nh, gs = _split_proj(proj, cfg)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B,S,H]
+    if conv_state is None:
+        xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xs, B_, C_ = jnp.split(xbc, [d_in, d_in + gs], axis=-1)
+        xh = xs.reshape(B, S, nh, s.head_dim)
+        Bh = B_.reshape(B, S, s.n_groups, s.d_state)
+        Ch = C_.reshape(B, S, s.n_groups, s.d_state)
+        y = ssd_chunked(
+            xh.astype(jnp.float32), Bh.astype(jnp.float32),
+            Ch.astype(jnp.float32), dt, p["A_log"], p["D"], s.chunk
+        )
+        y = y.reshape(B, S, d_in).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+        return y @ p["out_proj"]
+    else:
+        xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+        xs, B_, C_ = jnp.split(xbc, [d_in, d_in + gs], axis=-1)
+        xh = xs.reshape(B, nh, s.head_dim).astype(jnp.float32)     # S == 1
+        Bh = B_.reshape(B, s.n_groups, s.d_state).astype(jnp.float32)
+        Ch = C_.reshape(B, s.n_groups, s.d_state).astype(jnp.float32)
+        rep = nh // s.n_groups
+        Bh = jnp.repeat(Bh, rep, axis=1)                           # [B,H,N]
+        Ch = jnp.repeat(Ch, rep, axis=1)
+        A = -jnp.exp(p["A_log"])
+        dt1 = dt[:, 0]                                             # [B,H]
+        a = jnp.exp(dt1 * A)                                       # [B,H]
+        # S' = a S + dt B x^T ; y = C . S' + D x
+        upd = dt1[..., None, None] * Bh[..., :, None] * xh[..., None, :]
+        new_state = ssd_state * a[..., None, None] + upd           # [B,H,N,P]
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+        y = y + xh * p["D"][None, :, None]
+        y = y.reshape(B, 1, d_in).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+        return y @ p["out_proj"], new_conv, new_state
+
+
+def ssd_reference(x, B_, C_, dt, A_log, D):
+    """O(S) sequential oracle for ssd_chunked (tests)."""
+    Bsz, S, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    A = -jnp.exp(A_log)
+    Bh = jnp.repeat(B_, rep, axis=2)
+    Ch = jnp.repeat(C_, rep, axis=2)
+
+    def step(s, inp):
+        xt, bt, ct, dtt = inp
+        a = jnp.exp(dtt * A)                                       # [B,H]
+        s = s * a[..., None, None] + dtt[..., None, None] * (
+            bt[..., :, None] * xt[..., None, :]
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((Bsz, H, N, Pd), x.dtype)
+    _, ys = jax.lax.scan(
+        step,
+        s0,
+        (
+            jnp.moveaxis(x, 1, 0),
+            jnp.moveaxis(Bh, 1, 0),
+            jnp.moveaxis(Ch, 1, 0),
+            jnp.moveaxis(dt, 1, 0),
+        ),
+    )
+    y = jnp.moveaxis(ys, 0, 1)
+    return y + x * D[None, None, :, None]

@@ -1,0 +1,458 @@
+"""Unified LM assembly for every assigned architecture family.
+
+A model is a repeated *super-block pattern* scanned over R repeats:
+
+  dense        ['attn']            x n_layers
+  moe          ['attn_moe']        x n_layers     (deepseek-moe)
+  moe + MLA    ['mla_moe']         x n_layers     (deepseek-v3)
+  ssm          ['ssm']             x n_layers     (mamba2)
+  hybrid       ['ssm']*6 + shared-attn call       (zamba2: one SHARED
+               weight set applied after every 6 mamba layers)
+  vlm          ['attn']*4 + ['xattn']             (llama-3.2-vision:
+               cross-attn to stub image embeddings every 5th layer)
+  encdec       encoder ['enc'] x encoder_layers;
+               decoder ['dec'] (self-attn + cross-attn) x n_layers
+               (whisper: stub conv frontend provides audio embeddings)
+
+Parameters for each pattern position are stacked over R and consumed by
+`lax.scan` (compact HLO: one lowered block per pattern position
+regardless of depth -- essential for 61-layer dry-runs on a CPU host).
+Caches are likewise stacked [R, ...] and scanned.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import (
+    cross_attn_apply,
+    cross_attn_init,
+    gqa_decode,
+    gqa_full,
+    gqa_init,
+    mla_decode,
+    mla_full,
+    mla_init,
+)
+from .common import ModelConfig
+from .layers import (
+    chunked_softmax_xent,
+    cross_entropy,
+    embed_apply,
+    embed_init,
+    gelu_mlp_apply,
+    gelu_mlp_init,
+    init_rms_norm,
+    rms_norm,
+    swiglu_apply,
+    swiglu_init,
+    unembed_apply,
+)
+from .moe import moe_apply, moe_init
+from .ssm import ssm_block, ssm_init
+from . import hints
+
+
+# ------------------------------------------------------------- patterns
+
+
+def layer_pattern(cfg: ModelConfig) -> Tuple[List[str], int, bool]:
+    """Returns (pattern, repeats, has_shared_block)."""
+    if cfg.family == "dense":
+        return ["attn"], cfg.n_layers, False
+    if cfg.family == "moe":
+        typ = "mla_moe" if cfg.mla is not None else "attn_moe"
+        return [typ], cfg.n_layers, False
+    if cfg.family == "ssm":
+        return ["ssm"], cfg.n_layers, False
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every or 6
+        assert cfg.n_layers % k == 0, "hybrid layers must divide shared_attn_every"
+        return ["ssm"] * k, cfg.n_layers // k, True
+    if cfg.family == "vlm":
+        k = cfg.cross_attn_every or 5
+        assert cfg.n_layers % k == 0
+        return ["attn"] * (k - 1) + ["xattn"], cfg.n_layers // k, False
+    if cfg.family == "encdec":
+        return ["dec"], cfg.n_layers, False
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------- init
+
+
+def _layer_init(key, typ: str, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if typ == "attn":
+        return {
+            "ln1": init_rms_norm(d),
+            "attn": gqa_init(ks[0], cfg, dtype),
+            "ln2": init_rms_norm(d),
+            "mlp": swiglu_init(ks[1], d, cfg.d_ff, dtype),
+        }
+    if typ == "attn_moe":
+        return {
+            "ln1": init_rms_norm(d),
+            "attn": gqa_init(ks[0], cfg, dtype),
+            "ln2": init_rms_norm(d),
+            "moe": moe_init(ks[1], cfg, dtype),
+        }
+    if typ == "mla_moe":
+        return {
+            "ln1": init_rms_norm(d),
+            "attn": mla_init(ks[0], cfg, dtype),
+            "ln2": init_rms_norm(d),
+            "moe": moe_init(ks[1], cfg, dtype),
+        }
+    if typ == "ssm":
+        return {"ln1": init_rms_norm(d), "ssm": ssm_init(ks[0], cfg, dtype)}
+    if typ == "xattn":
+        return {
+            "ln1": init_rms_norm(d),
+            "xattn": cross_attn_init(ks[0], cfg, dtype),
+            "gate": jnp.zeros((1,), jnp.float32),
+            "ln2": init_rms_norm(d),
+            "mlp": swiglu_init(ks[1], d, cfg.d_ff, dtype),
+        }
+    if typ == "enc":
+        return {
+            "ln1": init_rms_norm(d),
+            "attn": gqa_init(ks[0], cfg, dtype),
+            "ln2": init_rms_norm(d),
+            "mlp": gelu_mlp_init(ks[1], d, cfg.d_ff, dtype),
+        }
+    if typ == "dec":
+        return {
+            "ln1": init_rms_norm(d),
+            "attn": gqa_init(ks[0], cfg, dtype),
+            "lnx": init_rms_norm(d),
+            "xattn": cross_attn_init(ks[1], cfg, dtype),
+            "ln2": init_rms_norm(d),
+            "mlp": gelu_mlp_init(ks[2], d, cfg.d_ff, dtype),
+        }
+    raise ValueError(typ)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    """Full parameter pytree.  Pattern-position params are stacked over R
+    (vmapped init) so the forward pass can scan them."""
+    dtype = cfg.jdtype
+    pattern, R, shared = layer_pattern(cfg)
+    keys = jax.random.split(key, 8 + len(pattern))
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, dtype),
+        "ln_f": init_rms_norm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(keys[1], cfg.vocab, cfg.d_model, dtype)
+    for i, typ in enumerate(pattern):
+        lk = jax.random.split(keys[2 + i], R)
+        params[f"pos{i}"] = jax.vmap(
+            lambda k: _layer_init(k, typ, cfg, dtype)
+        )(lk)
+    if shared:
+        params["shared_attn"] = _layer_init(keys[-3], "attn", cfg, dtype)
+    if cfg.family == "encdec":
+        ek = jax.random.split(keys[-2], cfg.encoder_layers)
+        params["enc"] = jax.vmap(lambda k: _layer_init(k, "enc", cfg, dtype))(ek)
+        params["enc_ln_f"] = init_rms_norm(cfg.d_model)
+    if cfg.family == "vlm":
+        params["img_proj"] = (
+            jax.random.normal(keys[-2], (cfg.d_model, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype)
+    if cfg.mtp:
+        params["mtp"] = _layer_init(keys[-1], "attn", cfg, dtype)
+        params["mtp_proj"] = (
+            jax.random.normal(keys[-1], (2 * cfg.d_model, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dtype)
+    return params
+
+
+# ------------------------------------------------------------- forward
+
+
+def _apply_layer(typ, p, x, cfg, positions, memory, aux_sum):
+    if typ in ("attn", "enc"):
+        h, _ = gqa_full(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                        positions, causal=(typ == "attn"))
+        x = x + h
+        mlp = gelu_mlp_apply if typ == "enc" else swiglu_apply
+        x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, aux_sum
+    if typ == "attn_moe":
+        h, _ = gqa_full(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+        x = x + h
+        h, aux = moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x + h, aux_sum + aux
+    if typ == "mla_moe":
+        h, _ = mla_full(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+        x = x + h
+        h, aux = moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x + h, aux_sum + aux
+    if typ == "ssm":
+        x = x + ssm_block(p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+        return x, aux_sum
+    if typ == "xattn":
+        h = cross_attn_apply(p["xattn"], rms_norm(x, p["ln1"], cfg.norm_eps), memory, cfg)
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * h
+        x = x + swiglu_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, aux_sum
+    if typ == "dec":
+        h, _ = gqa_full(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg, positions)
+        x = x + h
+        x = x + cross_attn_apply(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), memory, cfg)
+        x = x + gelu_mlp_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, aux_sum
+    raise ValueError(typ)
+
+
+def encode_memory(params, cfg: ModelConfig, memory_embeds):
+    """Memory as the decoder sees it: encdec runs the encoder stack; vlm
+    memory is projected per-call (cheap).  Serve engines must store THIS
+    in the decode cache, not the raw frontend embeddings."""
+    if cfg.family == "encdec":
+        return _encode(params, cfg, memory_embeds)
+    return memory_embeds
+
+
+def _encode(params, cfg, audio_embeds):
+    """Whisper encoder over stub frame embeddings [B, T, d]."""
+    x = audio_embeds.astype(cfg.jdtype)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(x, p):
+        x, _ = _apply_layer("enc", p, x, cfg, positions, None, 0.0)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, memory_embeds=None,
+                   remat: str = "none") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Backbone forward: tokens [B, S] -> (hidden [B, S, d], aux_loss).
+
+    memory_embeds: stub frontend output -- image patch embeddings (vlm)
+    or audio frame embeddings (encdec)."""
+    pattern, R, shared = layer_pattern(cfg)
+    B, S = tokens.shape
+    x = embed_apply(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    memory = None
+    if cfg.family == "vlm":
+        memory = memory_embeds.astype(cfg.jdtype) @ params["img_proj"]
+    elif cfg.family == "encdec":
+        memory = _encode(params, cfg, memory_embeds)
+
+    def super_block(carry, xs):
+        x, aux = carry
+        for i, typ in enumerate(pattern):
+            x = hints.constrain(x, "hidden")
+            x, aux = _apply_layer(typ, xs[f"pos{i}"], x, cfg, positions, memory, aux)
+        if shared:
+            x, aux = _apply_layer("attn", params["shared_attn"], x, cfg,
+                                  positions, None, aux)
+        return (hints.constrain(x, "hidden"), aux), None
+
+    if remat == "full":
+        super_block = jax.checkpoint(super_block, prevent_cse=False)
+    elif remat == "dots":
+        super_block = jax.checkpoint(
+            super_block,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+
+    xs = {f"pos{i}": params[f"pos{i}"] for i in range(len(pattern))}
+    (x, aux), _ = jax.lax.scan(super_block, (x, jnp.float32(0)), xs)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return x, aux
+
+
+def forward(params, cfg: ModelConfig, tokens, *, memory_embeds=None,
+            remat: str = "none") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward: tokens [B, S] -> (logits [B, S, V], aux_loss)."""
+    x, aux = forward_hidden(
+        params, cfg, tokens, memory_embeds=memory_embeds, remat=remat
+    )
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_apply(table, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, remat: str = "none"):
+    hidden, aux = forward_hidden(
+        params, cfg, batch["tokens"],
+        memory_embeds=batch.get("memory_embeds"), remat=remat,
+    )
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    loss = chunked_softmax_xent(hidden, table, batch["labels"])
+    metrics = {"ce": loss, "aux": aux}
+    if cfg.mtp:
+        # DeepSeek-V3 style multi-token prediction (depth 1): combine the
+        # backbone hidden with the embedding of the *next* token, run one
+        # extra attention block, and predict token t+2.
+        B, S = batch["tokens"].shape
+        next_tok = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+        emb_next = embed_apply(params["embed"], next_tok)
+        h_in = jnp.concatenate(
+            [rms_norm(hidden, params["ln_f"], cfg.norm_eps),
+             rms_norm(emb_next, params["ln_f"], cfg.norm_eps)], axis=-1
+        ) @ params["mtp_proj"]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        h_mtp, _ = _apply_layer("attn", params["mtp"], h_in, cfg, positions, None, 0.0)
+        labels_mtp = jnp.pad(
+            batch["labels"][:, 1:], ((0, 0), (0, 1)), constant_values=-100
+        )
+        mtp_loss = chunked_softmax_xent(h_mtp, table, labels_mtp)
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return loss + 0.01 * aux, metrics
+
+
+# ---------------------------------------------------------------- cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int, memory=None):
+    """Decode cache pytree, stacked [R, ...] per pattern position."""
+    pattern, R, shared = layer_pattern(cfg)
+    dtype = cfg.jdtype
+    s = cfg.ssm
+    # per-slot positions: continuous batching (each batch slot decodes at
+    # its own sequence offset)
+    cache: Dict[str, Any] = {"pos_idx": jnp.zeros((batch,), jnp.int32)}
+    for i, typ in enumerate(pattern):
+        if typ in ("attn", "enc", "dec"):
+            cache[f"pos{i}_k"] = jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+            cache[f"pos{i}_v"] = jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+        elif typ == "attn_moe":
+            cache[f"pos{i}_k"] = jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+            cache[f"pos{i}_v"] = jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+        elif typ == "mla_moe":
+            m = cfg.mla
+            cache[f"pos{i}_ckv"] = jnp.zeros((R, batch, seq, m.kv_lora_rank), dtype)
+            cache[f"pos{i}_kr"] = jnp.zeros((R, batch, seq, m.qk_rope_dim), dtype)
+        elif typ == "ssm":
+            d_in = s.expand * cfg.d_model
+            nh = d_in // s.head_dim
+            cch = d_in + 2 * s.n_groups * s.d_state
+            cache[f"pos{i}_conv"] = jnp.zeros((R, batch, s.d_conv - 1, cch), dtype)
+            cache[f"pos{i}_ssd"] = jnp.zeros((R, batch, nh, s.d_state, s.head_dim), jnp.float32)
+        elif typ == "xattn":
+            pass  # memory is static, stored once below
+    if shared:
+        cache["shared_k"] = jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+        cache["shared_v"] = jnp.zeros((R, batch, seq, cfg.n_kv_heads, cfg.hd), dtype)
+    if memory is not None:
+        cache["memory"] = memory
+    return cache
+
+
+def _decode_layer(typ, p, x, cfg, cache_slice, pos, memory):
+    """One-token decode through one layer; returns (x, new_cache_slice)."""
+    new = {}
+    if typ in ("attn", "attn_moe", "enc", "dec"):
+        h, ck, cv = gqa_decode(
+            p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+            cache_slice["k"], cache_slice["v"], pos,
+        )
+        new["k"], new["v"] = ck, cv
+        x = x + h
+        if typ == "dec":
+            x = x + cross_attn_apply(p["xattn"], rms_norm(x, p["lnx"], cfg.norm_eps), memory, cfg)
+        if typ == "attn_moe":
+            h, _ = moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+            x = x + h
+        else:
+            mlp = gelu_mlp_apply if typ in ("enc", "dec") else swiglu_apply
+            x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, new
+    if typ == "mla_moe":
+        h, ckv, ckr = mla_decode(
+            p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+            cache_slice["ckv"], cache_slice["kr"], pos,
+        )
+        new["ckv"], new["kr"] = ckv, ckr
+        x = x + h
+        h, _ = moe_apply(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x + h, new
+    if typ == "ssm":
+        y, conv, ssd = ssm_block(
+            p["ssm"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+            conv_state=cache_slice["conv"], ssd_state=cache_slice["ssd"], pos=pos,
+        )
+        new["conv"], new["ssd"] = conv, ssd
+        return x + y, new
+    if typ == "xattn":
+        h = cross_attn_apply(p["xattn"], rms_norm(x, p["ln1"], cfg.norm_eps), memory, cfg)
+        x = x + jnp.tanh(p["gate"]).astype(x.dtype) * h
+        x = x + swiglu_apply(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+        return x, new
+    raise ValueError(typ)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    """One decoding step.  tokens: [B, 1]; returns (logits [B,1,V], cache)."""
+    pattern, R, shared = layer_pattern(cfg)
+    pos = cache["pos_idx"]
+    x = embed_apply(params["embed"], tokens)
+    memory = cache.get("memory")
+    if memory is not None and cfg.family == "vlm":
+        memory = memory.astype(cfg.jdtype) @ params["img_proj"]
+
+    def super_block(carry, xs):
+        x = carry
+        new_sl = {}
+        for i, typ in enumerate(pattern):
+            sl = {
+                key.split("_", 1)[1]: val
+                for key, val in xs.items()
+                if key.startswith(f"pos{i}_")
+            }
+            x, new = _decode_layer(typ, xs[f"pos{i}"], x, cfg, sl, pos, memory)
+            for key, val in new.items():
+                new_sl[f"pos{i}_{key}"] = val
+        if shared:
+            h, ck, cv = gqa_decode(
+                params["shared_attn"]["attn"],
+                rms_norm(x, params["shared_attn"]["ln1"], cfg.norm_eps),
+                cfg, xs["shared_k"], xs["shared_v"], pos,
+            )
+            x = x + h
+            x = x + swiglu_apply(
+                params["shared_attn"]["mlp"],
+                rms_norm(x, params["shared_attn"]["ln2"], cfg.norm_eps),
+            )
+            new_sl["shared_k"], new_sl["shared_v"] = ck, cv
+        return x, new_sl
+
+    xs = {f"pos{i}": params[f"pos{i}"] for i in range(len(pattern))}
+    for key in cache:
+        if key.startswith("pos") and "_" in key and key != "pos_idx":
+            xs[key] = cache[key]
+        if key.startswith("shared_"):
+            xs[key] = cache[key]
+    x, new_caches = jax.lax.scan(super_block, x, xs)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed_apply(table, x)
+    out_cache = dict(cache)
+    out_cache.update(new_caches)
+    out_cache["pos_idx"] = pos + 1
+    return logits, out_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, memory_embeds=None):
+    """Prefill: full backbone forward, unembed ONLY the last position
+    (avoids materializing [B, S, V] logits for 32k prompts)."""
+    hidden, _ = forward_hidden(params, cfg, tokens, memory_embeds=memory_embeds)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return unembed_apply(table, hidden[:, -1:])

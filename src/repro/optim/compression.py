@@ -1,0 +1,114 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+``compressed_psum_ring`` is an int8-on-the-wire all-reduce implemented as
+a ring reduce-scatter followed by a ring all-gather, both transporting
+int8 payloads (plus tiny per-block f32 scales) via ``lax.ppermute``.
+Partial sums are kept in int32/float32 locally and re-quantized before
+each hop; the re-quantization error is returned to the caller and folded
+into the next step's gradient ("error feedback", Karimireddy et al.
+2019), keeping the optimizer unbiased to first order.
+
+Wire volume: 2*(p-1)/p * m bytes of int8 (+ scales) versus
+2*(p-1)/p * 4m bytes for an f32 ring all-reduce -- a 4x reduction, which
+the roofline's collective term sees directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block symmetric int8 quantization of a [N] f32 vector (N % BLOCK == 0)."""
+    blocks = x.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).reshape(-1)
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _rot(p: int, s: int):
+    return [(r, (r + s) % p) for r in range(p)]
+
+
+def compressed_psum_ring(flat: jnp.ndarray, axis_name: str, p: int):
+    """int8 ring all-reduce (mean) of a flat f32 vector inside shard_map.
+
+    flat length must be divisible by p * BLOCK (caller pads).  Returns the
+    mean-reduced vector and the local quantization error (for feedback).
+    """
+    if p == 1:
+        return flat, jnp.zeros_like(flat)
+    segs = flat.reshape(p, -1)            # [p, m/p]
+    r = jax.lax.axis_index(axis_name)
+
+    # ---- reduce-scatter: after p-1 hops rank r holds the full sum of
+    # segment r.  Each hop ships the partially-reduced segment as int8
+    # (+ f32 block scales); partials accumulate locally in f32.
+    send_seg = jnp.take(segs, (r + 1) % p, axis=0)
+    for h in range(p - 1):
+        q, s = quantize_int8(send_seg)
+        q = jax.lax.ppermute(q, axis_name, _rot(p, p - 1))  # r -> r-1
+        s = jax.lax.ppermute(s, axis_name, _rot(p, p - 1))
+        got = dequantize_int8(q, s)
+        nxt = (r + 2 + h) % p
+        send_seg = jnp.take(segs, nxt, axis=0) + got
+    my_sum = send_seg / p                 # mean of segment r
+    # (per-hop requantization errors are second order and not fed back;
+    # the final quantization below is covered by error feedback.)
+
+    # ---- all-gather the reduced segments (int8 on the wire)
+    q, s = quantize_int8(my_sum)
+    e_local = my_sum - dequantize_int8(q, s)
+    out = jnp.zeros_like(segs)
+    out = jax.lax.dynamic_update_slice(out, dequantize_int8(q, s)[None], (r, 0))
+    cur_q, cur_s = q, s
+    for h in range(1, p):
+        cur_q = jax.lax.ppermute(cur_q, axis_name, _rot(p, 1))
+        cur_s = jax.lax.ppermute(cur_s, axis_name, _rot(p, 1))
+        src = (r - h) % p
+        out = jax.lax.dynamic_update_slice(
+            out, dequantize_int8(cur_q, cur_s)[None], (src, 0)
+        )
+    err_total = jnp.zeros_like(segs).at[r].set(e_local).reshape(-1)
+    return out.reshape(-1), err_total
+
+
+def compressed_allreduce_tree(grads, errors, axis_name: str, p: int):
+    """Apply compressed_psum_ring leaf-wise with error feedback.
+
+    grads/errors: pytrees of f32 leaves (must be called inside shard_map
+    over ``axis_name`` with every leaf replicated across that axis aside
+    from the gradient values themselves).
+    Returns (mean_grads, new_errors).
+    """
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        n = target.size
+        pad = (-n) % (p * BLOCK)
+        flat = jnp.pad(target.reshape(-1), (0, pad))
+        red, err = compressed_psum_ring(flat, axis_name, p)
+        red = red[:n].reshape(g.shape)
+        err = err[:n].reshape(g.shape)
+        return red.astype(g.dtype), err
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in outs]),
+        treedef.unflatten([o[1] for o in outs]),
+    )

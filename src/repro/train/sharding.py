@@ -1,0 +1,243 @@
+"""Parameter / batch / cache PartitionSpec rules for the production mesh.
+
+Mesh axes: ('data', 'model') single-pod or ('pod', 'data', 'model')
+multi-pod.  Batch shards over (pod, data); parameters are 2-D sharded:
+the "model" (TP/EP) dimension over 'model' and the FSDP dimension over
+(pod, data) -- ZeRO-3 style, XLA re-gathers per layer inside the scan.
+
+Rules are name-based on the last path component with MoE-expert special
+cases; stacked (scanned) parameters get a leading None axis.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.tree_util import tree_map_with_path, DictKey
+
+from repro.models.common import ModelConfig
+
+
+def mesh_axes(mesh: Mesh) -> Tuple[Tuple[str, ...], str]:
+    """Returns (dp_axes, model_axis) for a production mesh."""
+    names = mesh.axis_names
+    model = "model" if "model" in names else names[-1]
+    dp = tuple(n for n in names if n != model)
+    return dp, model
+
+
+# base-ndim rules: name -> (base_ndim, spec builder)
+def _rules(dp, model):
+    fs = dp if (isinstance(dp, tuple) and len(dp) > 1) else (
+        dp[0] if dp else None)
+    return {
+        # [in, out] column-parallel
+        "wq": (2, P(fs, model)),
+        "wk": (2, P(fs, model)),
+        "wv": (2, P(fs, model)),
+        "w_gate": (2, P(fs, model)),
+        "w_up": (2, P(fs, model)),
+        "w_in": (2, P(fs, model)),
+        "in_proj": (2, P(fs, model)),
+        "w_dq": (2, P(fs, model)),
+        "w_uq": (2, P(fs, model)),
+        "w_dkv": (2, P(fs, None)),
+        "w_uk": (2, P(None, model)),
+        "w_uv": (2, P(None, model)),
+        "w_kr": (2, P(fs, None)),
+        "img_proj": (2, P(fs, model)),
+        "mtp_proj": (2, P(fs, model)),
+        # [in, out] row-parallel
+        "wo": (2, P(model, fs)),
+        "w_down": (2, P(model, fs)),
+        "w_out": (2, P(model, fs)),
+        "out_proj": (2, P(model, fs)),
+        # embeddings: vocab over model, d over fsdp
+        "embed": (2, P(model, fs)),
+        "unembed": (2, P(model, fs)),
+        # biases follow the sharded output dim
+        "bq": (1, P(model)),
+        "bk": (1, P(model)),
+        "bv": (1, P(model)),
+        # ssm conv
+        "conv_w": (2, P(None, model)),
+        "conv_b": (1, P(model)),
+        # router: small, replicated
+        "router": (2, P(None, None)),
+    }
+
+
+EP_MODE = "2d"  # "2d": E over model + FFN dim over fsdp (ZeRO-3 style)
+                # "full": E over (data x model) -- experts fully local,
+                # no per-microbatch expert re-gather; dispatch becomes an
+                # all-to-all (the DeepSeek-V3 EP design)
+
+
+def set_ep_mode(mode: str):
+    global EP_MODE
+    assert mode in ("2d", "full")
+    EP_MODE = mode
+
+
+def ep_axes(mesh: Mesh):
+    """Expert-sharding axes under EP_MODE='full': (data, model) --
+    'pod' (if present) shards the expert d dim instead (E=256 does not
+    divide 512)."""
+    names = mesh.axis_names
+    return tuple(n for n in names if n in ("data", "model"))
+
+
+def _moe_expert_specs(dp, model, mesh: Mesh):
+    if EP_MODE == "full":
+        ea = ep_axes(mesh)
+        pod = "pod" if "pod" in mesh.axis_names else None
+        return {
+            "w_gate": P(ea, pod, None),
+            "w_up": P(ea, pod, None),
+            "w_down": P(ea, None, pod),
+        }
+    return {
+        "w_gate": P(model, None, dp),
+        "w_up": P(model, None, dp),
+        "w_down": P(model, dp, None),
+    }
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def fit_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop spec axes whose mesh size does not divide the dimension.
+
+    pjit *arguments* require exact divisibility (unlike internal
+    constraints, which pad); odd vocabularies (49155, 50280, 51865) and
+    batch=1 cells would otherwise fail to lower.  Dropping the axis
+    replicates that dim -- correct, at some memory cost (DESIGN.md
+    notes vocab padding as the production alternative)."""
+    fitted = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            fitted.append(None if i >= len(shape) else ax)
+            continue
+        fitted.append(ax if shape[i] % _axis_size(mesh, ax) == 0 else None)
+    return P(*fitted)
+
+
+def param_pspecs(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                 no_fsdp: bool = False):
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    no_fsdp=True replicates parameters over the dp axes (inference: no
+    optimizer state, so ZeRO-style dp-sharding only buys a per-step
+    weight all-gather -- measured ~2 GB/token on stablelm decode)."""
+    dp, model = mesh_axes(mesh)
+    fs = None if no_fsdp else (dp if len(dp) > 1 else (dp[0] if dp else None))
+    rules = _rules(() if no_fsdp else dp, model)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        ndim = len(leaf.shape)
+        in_moe = any("moe" in n for n in names) and not any(
+            n == "shared" for n in names
+        )
+        moe_specs = _moe_expert_specs(fs, model, mesh)
+        if in_moe and name in moe_specs and ndim >= 3:
+            base = moe_specs[name]
+            extra = ndim - 3
+            return fit_spec(P(*([None] * extra + list(base))), leaf.shape, mesh)
+        if name in rules:
+            base_ndim, base = rules[name]
+            extra = ndim - base_ndim
+            if extra < 0:
+                return P()
+            return fit_spec(P(*([None] * extra + list(base))), leaf.shape, mesh)
+        return P()  # norms, scalars, A_log, D, dt_bias, gate ...
+
+    return tree_map_with_path(spec_for, params_shape)
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, batch_shape: Dict[str, Any]):
+    dp, model = mesh_axes(mesh)
+    fs = dp if len(dp) > 1 else dp[0]
+    out = {}
+    for k, v in batch_shape.items():
+        nd = len(v.shape)
+        out[k] = fit_spec(P(*([fs] + [None] * (nd - 1))), v.shape, mesh)
+    return out
+
+
+CACHE_SEQ_SHARD = True  # False: batch-only sharding (replicate S over
+                        # model) when kv heads don't divide the axis
+
+
+def set_cache_seq_shard(flag: bool):
+    global CACHE_SEQ_SHARD
+    CACHE_SEQ_SHARD = flag
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_shape: Dict[str, Any]):
+    """Decode-cache sharding: batch over dp where possible; the sequence
+    dim of attention caches over 'model' when kv-heads don't divide the
+    model axis (flash-decode style; softmax reductions over S become the
+    psum GSPMD inserts), else heads over 'model'."""
+    dp, model = mesh_axes(mesh)
+    fs = dp if len(dp) > 1 else dp[0]
+    msize = mesh.shape[model]
+    out = {}
+    for k, v in cache_shape.items():
+        nd = len(v.shape)
+        if k == "pos_idx":
+            out[k] = P(fs)  # per-slot positions, batch-sharded
+        elif k == "memory":
+            out[k] = P(fs, None, None)
+        elif k.endswith("_k") or k.endswith("_v"):
+            # [R, B, S, Hkv, hd]
+            hkv = v.shape[3]
+            if hkv % msize == 0:
+                out[k] = P(None, fs, None, model, None)
+            elif CACHE_SEQ_SHARD:
+                out[k] = P(None, fs, model, None, None)
+            else:
+                out[k] = P(None, fs, None, None, None)
+        elif k.endswith("_ckv") or k.endswith("_kr"):
+            # [R, B, S, r] (MLA compressed cache): seq over model
+            if CACHE_SEQ_SHARD:
+                out[k] = P(None, fs, model, None)
+            else:
+                out[k] = P(None, fs, None, None)
+        elif k.endswith("_conv"):
+            out[k] = P(None, fs, None, model)
+        elif k.endswith("_ssd"):
+            # [R, B, H, N, P]: heads over model
+            out[k] = P(None, fs, model, None, None)
+        else:
+            out[k] = P(*([None] * nd))
+        out[k] = fit_spec(out[k], v.shape, mesh)
+    return out
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,189 @@
+"""Multi-device collective worker: run under XLA host-device flags.
+
+Invoked as a subprocess by test_collectives.py (and by the collective
+benchmarks) so that the main process keeps its single-device view:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python tests/mp_worker.py <what> <p>
+"""
+
+import os
+import sys
+
+if __name__ == "__main__":
+    what = sys.argv[1] if len(sys.argv) > 1 else "all"
+    p = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={p}"
+    )
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.collectives import (
+    circulant_allgather,
+    circulant_allgatherv,
+    circulant_broadcast,
+    ring_allgather,
+)
+
+
+def make_mesh(p):
+    return Mesh(np.array(jax.devices()[:p]), ("data",))
+
+
+def sharded(mesh, arr):
+    return jax.device_put(arr, NamedSharding(mesh, P("data")))
+
+
+def check_broadcast(p, n_blocks, root, elems=97, dtype=jnp.float32):
+    mesh = make_mesh(p)
+    rng = np.random.default_rng(0)
+    data = rng.normal(size=(p, elems)).astype(dtype)
+    x = sharded(mesh, jnp.asarray(data))
+    out = jax.jit(
+        lambda a: circulant_broadcast(mesh, "data", a, n_blocks=n_blocks, root=root)
+    )(x)
+    out = np.asarray(out)
+    for r in range(p):
+        np.testing.assert_allclose(out[r], data[root], rtol=0, atol=0)
+    print(f"broadcast p={p} n={n_blocks} root={root} ok")
+
+
+def check_allgather(p, n_blocks, elems=64, dtype=jnp.float32):
+    mesh = make_mesh(p)
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(p * elems,)).astype(dtype)
+    x = sharded(mesh, jnp.asarray(data))
+    out = jax.jit(
+        lambda a: circulant_allgather(mesh, "data", a, n_blocks=n_blocks)
+    )(x)
+    np.testing.assert_allclose(np.asarray(out), data, rtol=0, atol=0)
+    print(f"allgather p={p} n={n_blocks} ok")
+
+
+def check_allgatherv(p, n_blocks, sizes, dtype=jnp.int32):
+    mesh = make_mesh(p)
+    cap = max(max(sizes), 1)
+    rng = np.random.default_rng(2)
+    rows = np.zeros((p, cap), dtype=np.int32)
+    for j in range(p):
+        rows[j, : sizes[j]] = rng.integers(0, 1000, size=sizes[j])
+    x = sharded(mesh, jnp.asarray(rows))
+    out = jax.jit(
+        lambda a: circulant_allgatherv(mesh, "data", a, sizes, n_blocks=n_blocks)
+    )(x)
+    out = np.asarray(out)
+    for j in range(p):
+        np.testing.assert_array_equal(out[j, : sizes[j]], rows[j, : sizes[j]])
+    print(f"allgatherv p={p} n={n_blocks} sizes={sizes} ok")
+
+
+def check_compressed_allreduce(p, elems=2048):
+    from jax.sharding import PartitionSpec as P
+    from repro.optim.compression import compressed_allreduce_tree, init_error_state
+
+    mesh = make_mesh(p)
+    rng = np.random.default_rng(7)
+    data = rng.normal(size=(p, elems)).astype(np.float32)
+    x = sharded(mesh, jnp.asarray(data))
+
+    def body(xs):
+        g = {"w": xs[0]}
+        e = {"w": jnp.zeros_like(xs[0])}
+        red, new_e = compressed_allreduce_tree(g, e, "data", p)
+        return red["w"][None]
+
+    out = jax.jit(
+        jax.shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    )(x)
+    expect = data.mean(axis=0)
+    got = np.asarray(out)
+    # int8 block quantization noise: scale ~ max|g|/127 per hop
+    tol = 3.0 * np.abs(data).max() / 127.0
+    for r in range(p):
+        err = np.abs(got[r] - expect)
+        assert err.max() < tol, f"compressed allreduce too lossy: {err.max()} > {tol}"
+    print(f"compressed_allreduce p={p} ok (max abs err {err.max():.4f})")
+
+
+def check_reduce_scatter(p):
+    from repro.core.collectives import circulant_reduce_scatter
+
+    mesh = make_mesh(p)
+    rng = np.random.default_rng(13)
+    for n in (1, 2, 3, 6):
+        L = p * 24
+        data = rng.normal(size=(p, L)).astype(np.float32)
+        x = sharded(mesh, jnp.asarray(data))
+        out = jax.jit(
+            lambda a: circulant_reduce_scatter(mesh, "data", a, n_blocks=n)
+        )(x)
+        out = np.asarray(out)
+        expect = data.sum(axis=0).reshape(p, -1)
+        np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-4)
+        print(f"reduce_scatter p={p} n={n} ok")
+
+
+def check_restore_broadcast(p):
+    """Restore fan-out: root rank's checkpoint pytree reaches every rank."""
+    from jax.sharding import PartitionSpec as P
+    from repro.train.restore_broadcast import broadcast_state
+
+    mesh = make_mesh(p)
+    rng = np.random.default_rng(11)
+    w = rng.normal(size=(p, 33, 7)).astype(np.float32)   # only row 0 is "real"
+    b = rng.normal(size=(p, 13)).astype(np.float32)
+    state = {
+        "w": sharded(mesh, jnp.asarray(w)),
+        "b": sharded(mesh, jnp.asarray(b)),
+    }
+    out = jax.jit(lambda s: broadcast_state(mesh, "data", s, n_blocks=3))(state)
+    for r in range(p):
+        np.testing.assert_allclose(np.asarray(out["w"])[r], w[0], atol=0)
+        np.testing.assert_allclose(np.asarray(out["b"])[r], b[0], atol=0)
+    print(f"restore_broadcast p={p} ok")
+
+
+def check_ring(p, elems=16):
+    mesh = make_mesh(p)
+    data = np.arange(p * elems, dtype=np.float32)
+    x = sharded(mesh, jnp.asarray(data))
+    out = jax.jit(lambda a: ring_allgather(mesh, "data", a))(x)
+    np.testing.assert_allclose(np.asarray(out), data)
+    print(f"ring p={p} ok")
+
+
+def main(what, p):
+    if what in ("broadcast", "all"):
+        for n in (1, 2, 3, 5, 8):
+            check_broadcast(p, n, root=0)
+        check_broadcast(p, 4, root=p // 2)
+        check_broadcast(p, 4, root=p - 1)
+        check_broadcast(p, 3, root=0, dtype=jnp.bfloat16)
+        check_broadcast(p, 3, root=0, dtype=jnp.int32)
+    if what in ("allgather", "all"):
+        for n in (1, 2, 5, 8):
+            check_allgather(p, n)
+        check_allgather(p, 3, dtype=jnp.bfloat16)
+    if what in ("allgatherv", "all"):
+        rng = np.random.default_rng(3)
+        check_allgatherv(p, 2, [10 * ((j % 3)) + 1 for j in range(p)])
+        # degenerate: one rank has everything
+        check_allgatherv(p, 3, [600] + [1] * (p - 1))
+        check_allgatherv(p, 2, list(rng.integers(1, 50, size=p)))
+    if what in ("ring", "all"):
+        check_ring(p)
+    if what in ("compressed", "all"):
+        check_compressed_allreduce(p)
+    if what in ("restore", "all"):
+        check_restore_broadcast(p)
+    if what in ("reducescatter", "all"):
+        check_reduce_scatter(p)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main(what, p)

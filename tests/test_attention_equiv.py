@@ -1,0 +1,108 @@
+"""Equivalence properties of the attention implementations:
+
+* MLA absorbed decode == materialized full attention at the same position
+  (the absorbed form folds W_uk/W_uv through the latent cache; both must
+  produce identical outputs),
+* GQA decode chain == full causal attention row-by-row,
+* SSM single-step recurrence == chunked scan at the same position.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import (
+    gqa_decode,
+    gqa_full,
+    gqa_init,
+    mla_decode,
+    mla_full,
+    mla_init,
+)
+from repro.models.common import MLAConfig, ModelConfig, SSMConfig
+from repro.models.ssm import ssm_block, ssm_init
+
+
+def test_mla_absorbed_decode_matches_materialized():
+    cfg = ModelConfig(
+        name="mla-test", family="moe", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=64, vocab=128,
+        mla=MLAConfig(q_lora_rank=48, kv_lora_rank=32, qk_nope_dim=16,
+                      qk_rope_dim=8, v_head_dim=16),
+        dtype="float32",
+    )
+    key = jax.random.PRNGKey(0)
+    p = mla_init(key, cfg, jnp.float32)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full_out, _ = mla_full(p, x, cfg, positions)
+
+    # decode step-by-step with the compressed cache
+    ckv = jnp.zeros((B, S, cfg.mla.kv_lora_rank), jnp.float32)
+    kr = jnp.zeros((B, S, cfg.mla.qk_rope_dim), jnp.float32)
+    outs = []
+    for t in range(S):
+        o, ckv, kr = mla_decode(p, x[:, t : t + 1], cfg, ckv, kr,
+                                jnp.full((B,), t, jnp.int32))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full_out), atol=2e-4, rtol=2e-4
+    )
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_gqa_decode_matches_full(window):
+    cfg = ModelConfig(
+        name="gqa-test", family="dense", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=128, sliding_window=window,
+        dtype="float32",
+    )
+    p = gqa_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 9
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    full_out, _ = gqa_full(p, x, cfg, positions)
+
+    ck = jnp.zeros((B, S, cfg.n_kv_heads, cfg.hd), jnp.float32)
+    cv = jnp.zeros_like(ck)
+    outs = []
+    for t in range(S):
+        o, ck, cv = gqa_decode(p, x[:, t : t + 1], cfg, ck, cv,
+                               jnp.full((B,), t, jnp.int32))
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full_out), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_ssm_decode_matches_chunked():
+    cfg = ModelConfig(
+        name="ssm-test", family="ssm", n_layers=1, d_model=32, n_heads=0,
+        n_kv_heads=0, d_ff=0, vocab=64,
+        ssm=SSMConfig(d_state=8, d_conv=4, expand=2, head_dim=8,
+                      n_groups=1, chunk=4),
+        dtype="float32",
+    )
+    p = ssm_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    B, S = 2, 11
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+    full = ssm_block(p, x, cfg)
+
+    d_in = cfg.ssm.expand * cfg.d_model
+    nh = d_in // cfg.ssm.head_dim
+    cch = d_in + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    conv = jnp.zeros((B, cfg.ssm.d_conv - 1, cch), jnp.float32)
+    ssd = jnp.zeros((B, nh, cfg.ssm.d_state, cfg.ssm.head_dim), jnp.float32)
+    outs = []
+    for t in range(S):
+        y, conv, ssd = ssm_block(p, x[:, t : t + 1], cfg,
+                                 conv_state=conv, ssd_state=ssd)
+        outs.append(y)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-4)

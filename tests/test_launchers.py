@@ -1,0 +1,62 @@
+"""End-to-end launcher tests: train + serve on a real (host-device) mesh
+in subprocesses, including checkpoint auto-resume across restarts."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(mod, extra, devices=8, timeout=600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run(
+        [sys.executable, "-m", mod] + extra,
+        capture_output=True, text=True, env=env, timeout=timeout,
+    )
+    assert res.returncode == 0, f"{mod} failed:\n{res.stdout}\n{res.stderr}"
+    return res.stdout
+
+
+def test_train_launcher_and_resume():
+    with tempfile.TemporaryDirectory() as ck:
+        out = _run("repro.launch.train",
+                   ["--arch", "qwen2-0.5b", "--smoke", "--mesh", "4x2",
+                    "--steps", "10", "--ckpt-dir", ck, "--ckpt-every", "5"])
+        assert "done: 10 steps" in out
+        out2 = _run("repro.launch.train",
+                    ["--arch", "qwen2-0.5b", "--smoke", "--mesh", "4x2",
+                     "--steps", "12", "--ckpt-dir", ck, "--ckpt-every", "5"])
+        assert "resumed from step 10" in out2
+        assert "done: 2 steps" in out2
+
+
+def test_serve_launcher():
+    out = _run("repro.launch.serve",
+               ["--arch", "qwen2-0.5b", "--smoke", "--mesh", "4x2",
+                "--batch", "4", "--steps", "6"])
+    assert "OK" in out
+
+
+def test_dryrun_input_specs_all_cells():
+    """input_specs() (the dry-run contract) builds for every cell."""
+    import jax
+
+    from repro.configs import all_arch_names
+    from repro.launch.dryrun import LONG_OK, input_specs
+    from repro.models.common import SHAPES
+
+    for arch in all_arch_names():
+        for shape in SHAPES:
+            if shape == "long_500k" and arch not in LONG_OK:
+                continue
+            specs = input_specs(arch, shape)
+            assert "tokens" in specs
+            for leaf in jax.tree.leaves(specs):
+                assert hasattr(leaf, "shape") and hasattr(leaf, "dtype")

@@ -1,0 +1,47 @@
+"""End-to-end simulation tests for Algorithm 1 (broadcast) and Algorithm 2
+(all-to-all broadcast): payload-checked delivery in exactly n-1+q rounds."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simulator import simulate_allgather, simulate_broadcast
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 7, 8, 16, 17, 31, 33, 100])
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 11])
+def test_broadcast_delivers_optimal_rounds(p, n):
+    res = simulate_broadcast(p, n)
+    assert res.rounds == res.optimal_rounds
+
+
+@pytest.mark.parametrize("p", [5, 17, 33])
+@pytest.mark.parametrize("root", [0, 1, 3, 4])
+def test_broadcast_nonzero_root(p, root):
+    res = simulate_broadcast(p, 6, root=root)
+    assert res.rounds == res.optimal_rounds
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 5, 8, 13, 17, 33])
+@pytest.mark.parametrize("n", [1, 2, 5, 9])
+def test_allgather_delivers_optimal_rounds(p, n):
+    res = simulate_allgather(p, n)
+    assert res.rounds == res.optimal_rounds
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=150), st.integers(min_value=1, max_value=16))
+def test_broadcast_hypothesis(p, n):
+    simulate_broadcast(p, n)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=40), st.integers(min_value=1, max_value=8))
+def test_allgather_hypothesis(p, n):
+    simulate_allgather(p, n)
+
+
+def test_broadcast_volume_is_optimal():
+    # Every non-root receives each block exactly once: (p-1)*n block moves.
+    for p, n in [(8, 4), (17, 5), (33, 3)]:
+        res = simulate_broadcast(p, n)
+        assert res.blocks_moved == (p - 1) * n
