@@ -24,6 +24,7 @@ from repro.core.costmodel import (
     bcast_scatter_allgather_cost,
     optimal_num_blocks_bcast,
 )
+from repro.core.engine import get_bundle
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -32,12 +33,16 @@ SIZES = [1 << k for k in range(6, 27, 2)]  # 64 B .. 64 MB
 
 
 def model_rows(p: int = P_CLUSTER, model: CommModel = CommModel(alpha=2e-6, beta=1 / 10e9)):
+    # One cached bundle serves the whole sweep (and anything else this
+    # process later runs at the same p).
+    bundle = get_bundle(p)
     rows = []
     for m in SIZES:
         n = optimal_num_blocks_bcast(p, m, model)
         rows.append({
             "m": m,
             "n_opt": n,
+            "rounds": bundle.rounds(max(1, n)),
             "circulant_us": 1e6 * bcast_circulant_cost(p, m, n, model),
             "binomial_us": 1e6 * bcast_binomial_cost(p, m, model),
             "scatter_ag_us": 1e6 * bcast_scatter_allgather_cost(p, m, model),
@@ -88,9 +93,10 @@ for m in (1024, 65536, 1048576):
 
 
 def main():
-    print("name,m_bytes,n_opt,circulant_us,binomial_us,scatter_ag_us,pipeline_us")
+    print("name,m_bytes,n_opt,rounds,circulant_us,binomial_us,scatter_ag_us,"
+          "pipeline_us")
     for r in model_rows():
-        print(f"fig1_model,{r['m']},{r['n_opt']},{r['circulant_us']:.1f},"
+        print(f"fig1_model,{r['m']},{r['n_opt']},{r['rounds']},{r['circulant_us']:.1f},"
               f"{r['binomial_us']:.1f},{r['scatter_ag_us']:.1f},{r['pipeline_us']:.1f}")
     print("name,impl,m_bytes,us_per_call")
     for r in wallclock_rows():

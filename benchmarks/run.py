@@ -20,7 +20,13 @@ def main() -> None:
         print("# === Table 3: schedule computation timing ===")
         from benchmarks import schedule_timing
 
-        schedule_timing.main()
+        schedule_timing.main("table3")
+
+    if which in ("engine", "all"):
+        print("# === Engine: batched/cached all-rank tables vs per-rank loop ===")
+        from benchmarks import schedule_timing
+
+        schedule_timing.main("engine")
 
     if which in ("fig1", "all"):
         print("# === Figure 1: broadcast ===")

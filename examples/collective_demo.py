@@ -22,12 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.collectives import (
-    build_tables,
-    circulant_allgatherv,
-    circulant_broadcast,
-)
-from repro.core.schedule import compute_skips, virtual_rounds
+from repro.core.collectives import circulant_allgatherv, circulant_broadcast
+from repro.core.engine import get_bundle
 
 
 def main():
@@ -37,20 +33,17 @@ def main():
 
     # ---- the communication plan of rank 1 for a 5-block broadcast
     n = 5
-    tabs = build_tables(p)
-    x = virtual_rounds(p, n)
-    print(f"\nbroadcast plan p={p}, n={n}: rounds = n-1+q = {n-1+tabs.q}, "
-          f"virtual rounds x={x}")
+    bundle = get_bundle(p)
+    print(f"\nbroadcast plan p={p}, n={n}: rounds = n-1+q = {bundle.rounds(n)}, "
+          f"virtual rounds x={bundle.virtual_rounds(n)}")
     r = 1
-    print(f"rank {r}: recv sched {list(tabs.recv[r])}, send sched {list(tabs.send[r])}")
-    for i in range(x, n - 1 + tabs.q + x):
-        k = i % tabs.q
-        off = tabs.q * ((i - k) // tabs.q) - x
-        rb = int(tabs.recv[r][k]) + off
-        sb = int(tabs.send[r][k]) + off
-        frm = (r - tabs.skip[k]) % p
-        to = (r + tabs.skip[k]) % p
-        print(f"  round {i-x}: recv block {rb if rb>=0 else '--'} from {frm}, "
+    print(f"rank {r}: recv sched {bundle.recv_row(r)}, send sched {bundle.send_row(r)}")
+    for rnd, (k, off) in enumerate(bundle.round_plan(n)):
+        rb = int(bundle.recv[r][k]) + off
+        sb = int(bundle.send[r][k]) + off
+        frm = int(bundle.neighbors_in[r][k])
+        to = int(bundle.neighbors_out[r][k])
+        print(f"  round {rnd}: recv block {rb if rb>=0 else '--'} from {frm}, "
               f"send block {sb if sb>=0 else '--'} to {to}")
 
     # ---- run it

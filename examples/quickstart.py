@@ -17,32 +17,28 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.core import (
-    ceil_log2,
-    compute_skips,
+    get_bundle,
     num_rounds,
-    schedule_tables,
     simulate_allgather,
     simulate_broadcast,
-    verify_schedules,
+    verify_bundle,
 )
 
 
 def main():
     p = int(sys.argv[1]) if len(sys.argv) > 1 else 17
     n = int(sys.argv[2]) if len(sys.argv) > 2 else 7
-    q = ceil_log2(p)
-    skips = compute_skips(p)
-    print(f"p={p}  q=ceil(log2 p)={q}  skips={list(skips)}")
+    bundle = get_bundle(p)
+    print(f"p={p}  q=ceil(log2 p)={bundle.q}  skips={list(bundle.skips)}")
 
-    recv, send = schedule_tables(p)
-    verify_schedules(p, recv, send)
+    verify_bundle(bundle)
     print(f"schedules for all {p} ranks verified against the four "
           "correctness conditions (paper 2.1)")
 
     if p <= 40:
         print("\nrank : recvblock[0..q-1]        sendblock[0..q-1]")
         for r in range(p):
-            print(f"{r:4d} : {str(recv[r]):24s} {send[r]}")
+            print(f"{r:4d} : {str(bundle.recv_row(r)):24s} {bundle.send_row(r)}")
 
     res = simulate_broadcast(p, n)
     print(f"\nbroadcast  p={p} n={n}: delivered in {res.rounds} rounds "

@@ -1,10 +1,12 @@
 """Core: round-optimal n-block broadcast schedules (Träff 2023) in O(log p).
 
 Public API:
+    get_bundle, ScheduleBundle (the cached schedule engine -- preferred)
     compute_skips, baseblock, recv_schedule, send_schedule, schedule_tables
-    verify_schedules, simulate_broadcast, simulate_allgather
+    verify_schedules, verify_bundle, simulate_broadcast, simulate_allgather
 """
 
+from .engine import ScheduleBundle, get_bundle
 from .schedule import (
     baseblock,
     ceil_log2,
@@ -16,9 +18,12 @@ from .schedule import (
     virtual_rounds,
 )
 from .simulator import SimResult, simulate_allgather, simulate_broadcast
-from .verify import verify_p, verify_schedules
+from .verify import verify_bundle, verify_p, verify_schedules
 
 __all__ = [
+    "ScheduleBundle",
+    "get_bundle",
+    "verify_bundle",
     "baseblock",
     "ceil_log2",
     "compute_skips",

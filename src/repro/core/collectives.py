@@ -5,10 +5,11 @@ TPU-native adaptation of Algorithm 1 (broadcast) and Algorithm 2
 ``Send(t^k) || Recv(f^k)`` on the circulant graph is one
 ``jax.lax.ppermute`` with the static rotation ``r -> (r + skip[k]) % p``.
 The per-rank receive/send block indices come from the O(log p) schedule
-algorithms; they are baked into small [p, q] integer tables (total host
-cost O(p log p), i.e. O(log p) per participating device) and looked up
-with the device's own ``axis_index`` at run time, so the traced program
-is identical on every device (SPMD).
+algorithms via the cached engine bundle (:mod:`repro.core.engine`):
+small [p, q] integer tables (total host cost O(p log p), i.e. O(log p)
+per participating device, paid once per process for each (p, root))
+looked up with the device's own ``axis_index`` at run time, so the
+traced program is identical on every device (SPMD).
 
 Hardware adaptation notes (see DESIGN.md):
   * the paper's one-ported bidirectional model maps to one ppermute per
@@ -30,8 +31,6 @@ phase), exactly as in the paper.
 
 from __future__ import annotations
 
-import math
-from functools import lru_cache, partial
 from typing import List, Optional, Sequence
 
 import jax
@@ -40,7 +39,8 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .costmodel import CommModel, optimal_num_blocks_allgather, optimal_num_blocks_bcast
-from .schedule import ceil_log2, compute_skips, schedule_tables, virtual_rounds
+from .engine import ScheduleBundle, get_bundle
+from .jaxcompat import shard_map as _shard_map
 
 __all__ = [
     "circulant_broadcast",
@@ -52,28 +52,18 @@ __all__ = [
 ]
 
 
-class CirculantTables:
-    """Host-side schedule constants for one axis size p."""
-
-    def __init__(self, p: int):
-        self.p = p
-        self.q = ceil_log2(p)
-        self.skip = compute_skips(p)
-        recv, send = schedule_tables(p)
-        # [p, q] int32 tables; q == 0 (p == 1) handled by callers.
-        self.recv = np.asarray(recv, dtype=np.int32).reshape(p, self.q)
-        self.send = np.asarray(send, dtype=np.int32).reshape(p, self.q)
-
-    def rounds(self, n: int) -> int:
-        return n - 1 + self.q
-
-    def x(self, n: int) -> int:
-        return virtual_rounds(self.p, n)
+# Seed-compat names: the schedule constants now live in the cached
+# engine bundle (root relabeling, batched tables, round plans included).
+# Both old entry points -- CirculantTables(p) and build_tables(p) --
+# resolve to the cached bundle.
+def CirculantTables(p: int) -> ScheduleBundle:  # noqa: N802 - legacy class name
+    """Deprecated alias for :func:`repro.core.engine.get_bundle`."""
+    return get_bundle(p)
 
 
-@lru_cache(maxsize=64)
-def build_tables(p: int) -> CirculantTables:
-    return CirculantTables(p)
+def build_tables(p: int) -> ScheduleBundle:
+    """Deprecated alias for :func:`repro.core.engine.get_bundle`."""
+    return get_bundle(p)
 
 
 def _rot_perm(p: int, s: int):
@@ -90,16 +80,6 @@ def _split_blocks(flat: jnp.ndarray, n: int):
     blocks = flat.reshape(n, bs)
     garbage = jnp.zeros((1, bs), flat.dtype)
     return jnp.concatenate([blocks, garbage], axis=0), bs, pad
-
-
-def _round_offsets(q: int, x: int, n: int):
-    """Static per-round (k, offset) pairs: eff = sched[k] + off, see
-    schedule adjustment folding in DESIGN.md (off_i = q*((i-k)//q) - x)."""
-    out = []
-    for i in range(x, n + q - 1 + x):
-        k = i % q
-        out.append((k, q * ((i - k) // q) - x))
-    return out
 
 
 # --------------------------------------------------------------- broadcast
@@ -124,40 +104,37 @@ def circulant_broadcast(
     p = mesh.shape[axis_name]
     if p == 1:
         return x
-    tabs = build_tables(p)
-    q = tabs.q
+    # Rooted bundle: rows are indexed by real rank, relabeling done once
+    # in the engine (no per-call-site modulo arithmetic).
+    bundle = get_bundle(p, root)
     per = x.shape[0] // p if x.shape[0] % p == 0 else None
     if per != 1:
         raise ValueError("x must have leading axis == axis size (one slice/rank)")
     elems = int(np.prod(x.shape[1:]))
     n = n_blocks or max(1, optimal_num_blocks_bcast(p, elems * x.dtype.itemsize, model))
     n = min(n, max(1, elems))
-    recv_t = jnp.asarray(tabs.recv)
-    send_t = jnp.asarray(tabs.send)
-    xv = tabs.x(n)
-    rounds = _round_offsets(q, xv, n)
+    recv_t, send_t = bundle.jnp_tables()
+    rounds = bundle.round_plan(n)
 
     def body(xs):
         r = jax.lax.axis_index(axis_name)
-        v = (r - root) % p  # virtual rank (paper: renumber so root = 0)
         flat = xs.reshape(-1)
         buf, bs, pad = _split_blocks(flat, n)
-        is_root = (v == 0)
-        buf = jnp.where(is_root, buf, jnp.zeros_like(buf))
-        my_recv = recv_t[v]  # [q]
-        my_send = send_t[v]
+        buf = jnp.where(r == root, buf, jnp.zeros_like(buf))
+        my_recv = recv_t[r]  # [q]
+        my_send = send_t[r]
         for (k, off) in rounds:
             sb = my_send[k] + off
             rb = my_recv[k] + off
             send_slot = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
             recv_slot = jnp.where(rb < 0, n, jnp.minimum(rb, n - 1))
             out_blk = jax.lax.dynamic_slice_in_dim(buf, send_slot, 1, axis=0)
-            got = jax.lax.ppermute(out_blk, axis_name, _rot_perm(p, tabs.skip[k]))
+            got = jax.lax.ppermute(out_blk, axis_name, _rot_perm(p, bundle.skip[k]))
             buf = jax.lax.dynamic_update_slice_in_dim(buf, got, recv_slot, axis=0)
         out = buf[:n].reshape(-1)[: flat.shape[0]]
         return out.reshape(xs.shape)
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         body,
         mesh=mesh,
         in_specs=P(axis_name),
@@ -188,17 +165,15 @@ def circulant_allgather(
     p = mesh.shape[axis_name]
     if p == 1:
         return x
-    tabs = build_tables(p)
-    q = tabs.q
+    bundle = get_bundle(p)
     if x.shape[0] % p != 0:
         raise ValueError(f"leading dim {x.shape[0]} not divisible by axis size {p}")
     shard_elems = int(np.prod(x.shape[1:])) * (x.shape[0] // p)
     nbytes = shard_elems * x.dtype.itemsize * p
     n = n_blocks or max(1, optimal_num_blocks_allgather(p, nbytes, model))
     n = min(n, max(1, shard_elems))
-    recv_t = jnp.asarray(tabs.recv)  # [p, q]
-    xv = tabs.x(n)
-    rounds = _round_offsets(q, xv, n)
+    recv_t = jnp.asarray(bundle.recv)  # [p, q]
+    rounds = bundle.round_plan(n)
     jidx = jnp.arange(p)
 
     def body(xs):
@@ -210,7 +185,7 @@ def circulant_allgather(
         buf = jnp.zeros((p, n + 1, bs), xs.dtype)
         buf = jax.lax.dynamic_update_slice(buf, own[None], (r, 0, 0))
         for (k, off) in rounds:
-            sk = tabs.skip[k]
+            sk = bundle.skip[k]
             # recvblocks_r[j][k] = recv[(r - j) % p][k]
             rb = recv_t[(r - jidx) % p, k] + off
             # sendblocks_r[j][k] = recv[(r - j + skip[k]) % p][k]
@@ -233,7 +208,7 @@ def circulant_allgather(
         out = buf[:, :n, :].reshape(p, -1)[:, : flat.shape[0]]
         return out.reshape((x.shape[0],) + x.shape[1:])
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         body,
         mesh=mesh,
         in_specs=P(axis_name),
@@ -267,17 +242,15 @@ def circulant_allgatherv(
     assert len(sizes) == p
     if p == 1:
         return x
-    tabs = build_tables(p)
-    q = tabs.q
+    bundle = get_bundle(p)
     total = sum(sizes)
     n = n_blocks or max(
         1, optimal_num_blocks_allgather(p, max(total, 1) * x.dtype.itemsize, model)
     )
     n = min(n, max(1, min([s for s in sizes if s > 0], default=1)))
     bs_j = [max(1, -(-sizes[j] // n)) for j in range(p)]  # per-root block size
-    recv_t = jnp.asarray(tabs.recv)
-    xv = tabs.x(n)
-    rounds = _round_offsets(q, xv, n)
+    recv_t = jnp.asarray(bundle.recv)
+    rounds = bundle.round_plan(n)
     cap = x.shape[-1]
 
     def body(xs):
@@ -293,7 +266,7 @@ def circulant_allgatherv(
                  jnp.zeros((1, bs_j[j]), xs.dtype)], axis=0)
             bufs.append(jnp.where(r == j, own, jnp.zeros_like(own)))
         for (k, off) in rounds:
-            sk = tabs.skip[k]
+            sk = bundle.skip[k]
             parts = []
             slots_r = []
             for j in range(p):
@@ -318,7 +291,7 @@ def circulant_allgatherv(
             rows.append(jnp.pad(rj, (0, cap - sizes[j])))
         return jnp.stack(rows)
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         body, mesh=mesh, in_specs=P(axis_name), out_specs=P(), check_vma=False
     )
     return shard(x)
@@ -353,8 +326,7 @@ def circulant_reduce_scatter(
     p = mesh.shape[axis_name]
     if p == 1:
         return x
-    tabs = build_tables(p)
-    q = tabs.q
+    bundle = get_bundle(p)
     L = x.shape[1]
     if L % p != 0:
         raise ValueError(f"row length {L} not divisible by p={p}")
@@ -363,9 +335,8 @@ def circulant_reduce_scatter(
         1, optimal_num_blocks_allgather(p, L * x.dtype.itemsize, model)
     )
     n = min(n, max(1, shard))
-    recv_t = jnp.asarray(tabs.recv)
-    xv = tabs.x(n)
-    rounds = _round_offsets(q, xv, n)
+    recv_t = jnp.asarray(bundle.recv)
+    rounds = bundle.round_plan(n)
     jidx = jnp.arange(p)
 
     def body(xs):
@@ -379,7 +350,7 @@ def circulant_reduce_scatter(
             [rows.reshape(p, n, bs), jnp.zeros((p, 1, bs), xs.dtype)], axis=1
         ).astype(jnp.float32)
         for (k, off) in reversed(rounds):
-            sk = tabs.skip[k]
+            sk = bundle.skip[k]
             # reverse of my forward receive: what I got, I now send
             e_send = recv_t[(r - jidx) % p, k] + off
             send_slot = jnp.where(e_send < 0, n, jnp.minimum(e_send, n - 1))
@@ -408,7 +379,7 @@ def circulant_reduce_scatter(
         out = own.reshape(-1)[:shard].astype(xs.dtype)
         return out[None]
 
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         body, mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name)
     )
     return shard_fn(x)
@@ -441,7 +412,7 @@ def ring_allgather(mesh: Mesh, axis_name: str, x: jax.Array):
             buf = jax.lax.dynamic_update_slice(buf, cur[None], (src,) + (0,) * xs.ndim)
         return buf.reshape((p * xs.shape[0],) + xs.shape[1:])
 
-    shard = jax.shard_map(
+    shard = _shard_map(
         body, mesh=mesh, in_specs=P(axis_name), out_specs=P(), check_vma=False
     )
     return shard(x)

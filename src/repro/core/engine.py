@@ -1,0 +1,280 @@
+"""Unified schedule engine: one cached entry point for every consumer.
+
+Every user of the paper's broadcast schedules (the JAX collectives, the
+round-based simulator, checkpoint-restore fan-out, the benchmarks) needs
+the same four artifacts for a given axis size p and root:
+
+  * the circulant-graph skips (Algorithm 3),
+  * the all-rank receive table recv[p, q] (Algorithms 4-6),
+  * the all-rank send table send[p, q] (Algorithms 7-9),
+  * the derived round structure (n-1+q rounds, x virtual rounds, the
+    per-round (k, offset) block-index folding).
+
+The seed recomputed and re-shaped these ad hoc in each consumer, with
+root relabeling done by scattered modulo arithmetic at every call site.
+This module centralizes all of it behind :func:`get_bundle`:
+
+  * **process-wide LRU caching** keyed on ``(p, root)`` -- repeated
+    collective calls, elastic restores and simulator sweeps share one
+    computation; ``get_bundle(p) is get_bundle(p)`` holds while cached;
+  * **batched all-rank tables**: the receive table is materialized once
+    into a NumPy ``[p, q]`` array (per-rank cost O(log p), Proposition 1)
+    and the send table is then derived *vectorized* in one NumPy gather
+    via Correctness Condition 2 / Proposition 4
+    (``send[r][k] == recv[(r + skip[k]) % p][k]``) instead of running
+    Algorithms 7-9 with their violation fallbacks per rank -- consumers
+    (Pallas kernels, ``jnp`` constant folding, the simulator) index the
+    arrays directly with no per-rank Python loops;
+  * **root relabeling in one place**: bundles for ``root != 0`` are a
+    row rotation of the root-0 tables (paper section 2.1 renumbers ranks
+    as ``(r - root) mod p``); bundle rows are indexed by *real* rank, so
+    consumers never touch the virtual numbering.
+
+Tables are small (p * ceil(log2 p) * 2 int32 entries) and immutable
+(NumPy ``writeable=False``), so sharing cached instances is safe.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property, lru_cache
+from typing import List, Tuple
+
+import numpy as np
+
+from .schedule import (
+    ceil_log2,
+    compute_skips,
+    num_rounds,
+    recv_schedule,
+    virtual_rounds,
+)
+
+__all__ = [
+    "ScheduleBundle",
+    "get_bundle",
+    "baseblock_table",
+    "bundle_cache_clear",
+    "bundle_cache_info",
+]
+
+
+def baseblock_table(p: int) -> np.ndarray:
+    """Vectorized Algorithm 4 over all ranks: baseblock[r] for r in 0..p-1.
+
+    One NumPy pass per skip index (q passes total, O(p log p) work with
+    no per-rank Python loop).  Matches :func:`repro.core.schedule.baseblock`
+    exactly: the root r=0 gets q (empty canonical skip sequence).
+    """
+    q = ceil_log2(p)
+    skip = compute_skips(p)
+    rem = np.arange(p, dtype=np.int64)
+    out = np.full(p, q, dtype=np.int32)
+    for k in range(q - 1, -1, -1):
+        undecided = out == q
+        hit = undecided & (rem == skip[k])
+        out[hit] = k
+        take = undecided & (rem > skip[k])
+        rem[take] -= skip[k]
+    return out
+
+
+def _recv_table0(p: int) -> np.ndarray:
+    """Root-0 receive table [p, q]: Algorithm 6 per rank (O(log p) each).
+
+    One bulk list->array conversion beats p per-row assignments.
+    """
+    q = ceil_log2(p)
+    skip = compute_skips(p)
+    rows = [recv_schedule(p, r, skip) for r in range(p)]
+    return np.asarray(rows, dtype=np.int32).reshape(p, q)
+
+
+def _send_table_from_recv(recv: np.ndarray, skip: Tuple[int, ...]) -> np.ndarray:
+    """Vectorized send table via Condition 2: send[r][k] = recv[(r+skip[k])%p][k].
+
+    Proposition 4 states the O(log p) Algorithms 7-9 compute exactly this
+    value, so the gather below reproduces ``send_schedule`` bit-for-bit
+    while skipping the per-rank violation fallbacks entirely.
+    """
+    p, q = recv.shape
+    ranks = np.arange(p, dtype=np.int64)[:, None]          # [p, 1]
+    skips_k = np.asarray(skip[:q], dtype=np.int64)[None, :]  # [1, q]
+    to = (ranks + skips_k) % p                             # [p, q] to-processors
+    return np.take_along_axis(recv, to.astype(np.intp), axis=0)
+
+
+@lru_cache(maxsize=128)
+def _tables0(p: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Cached immutable root-0 (recv, send) tables for axis size p."""
+    recv = _recv_table0(p)
+    send = _send_table_from_recv(recv, compute_skips(p))
+    recv.setflags(write=False)
+    send.setflags(write=False)
+    return recv, send
+
+
+# eq=False keeps object-identity __eq__/__hash__: the generated
+# field-tuple versions would raise on the ndarray fields, and identity
+# is the documented cache contract anyway.
+@dataclass(frozen=True, eq=False)
+class ScheduleBundle:
+    """Everything a consumer needs to run the paper's collectives.
+
+    ``recv`` / ``send`` are ``[p, q]`` int32 arrays whose rows are
+    indexed by *real* rank -- the root relabeling ``(r - root) mod p``
+    of paper section 2.1 is already folded in, so ``recv[r][k]`` is the
+    block (phase-relative; negative = previous phase / nonexistent) that
+    real rank ``r`` receives in round ``k`` of each q-round phase.
+    """
+
+    p: int
+    root: int
+    q: int
+    skips: Tuple[int, ...]
+    recv: np.ndarray
+    send: np.ndarray
+
+    # ``skip`` is the name the paper (and the seed's CirculantTables)
+    # used; keep it as an alias so call sites read like the pseudocode.
+    @property
+    def skip(self) -> Tuple[int, ...]:
+        return self.skips
+
+    # ------------------------------------------------------ round structure
+
+    def rounds(self, n: int) -> int:
+        """Optimal round count for an n-block operation: n-1+q (0 if p=1)."""
+        return num_rounds(self.p, n)
+
+    def virtual_rounds(self, n: int) -> int:
+        """x: initial virtual rounds so n-1+q+x is a multiple of q."""
+        return virtual_rounds(self.p, n)
+
+    # Seed-compat alias (CirculantTables.x).
+    def x(self, n: int) -> int:
+        return self.virtual_rounds(n)
+
+    def round_plan(self, n: int) -> List[Tuple[int, int]]:
+        """Static per-round (k, offset) pairs for an n-block operation.
+
+        Round i uses schedule column k = i % q with the phase offset
+        folded in: the effective block index is ``sched[r][k] + offset``
+        (off_i = q*((i-k)//q) - x; the two adjustment loops at the top of
+        Algorithm 1, precomputed per round).
+        """
+        q, x = self.q, self.virtual_rounds(n)
+        out = []
+        for i in range(x, n + q - 1 + x):
+            k = i % q
+            out.append((k, q * ((i - k) // q) - x))
+        return out
+
+    def adjusted_tables(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(recv, send) with the x virtual rounds folded into the entries.
+
+        Vectorized form of the per-rank adjustment loops of Algorithm 1:
+        entries of rounds k < x belong to the phase before (add q - x),
+        the rest shift down by x.  Returns fresh writable copies (the
+        simulator increments them in place round by round).
+        """
+        x = self.virtual_rounds(n)
+        out = []
+        for tab in (self.recv, self.send):
+            adj = tab.astype(np.int64, copy=True)
+            adj[:, :x] += self.q - x
+            adj[:, x:] -= x
+            out.append(adj)
+        return out[0], out[1]
+
+    # ------------------------------------------------------ graph structure
+
+    @cached_property
+    def neighbors_out(self) -> np.ndarray:
+        """[p, q] to-processors: neighbors_out[r][k] = (r + skip[k]) % p.
+
+        The q-regular circulant broadcast graph; identical for every
+        root (relabeling is a rotation, which commutes with rotation).
+        """
+        ranks = np.arange(self.p, dtype=np.int64)[:, None]
+        sk = np.asarray(self.skips[: self.q], dtype=np.int64)[None, :]
+        arr = (ranks + sk) % self.p
+        arr.setflags(write=False)
+        return arr
+
+    @cached_property
+    def neighbors_in(self) -> np.ndarray:
+        """[p, q] from-processors: neighbors_in[r][k] = (r - skip[k]) % p."""
+        ranks = np.arange(self.p, dtype=np.int64)[:, None]
+        sk = np.asarray(self.skips[: self.q], dtype=np.int64)[None, :]
+        arr = (ranks - sk) % self.p
+        arr.setflags(write=False)
+        return arr
+
+    @cached_property
+    def baseblocks(self) -> np.ndarray:
+        """[p] baseblock of each real rank's *virtual* rank (root has q)."""
+        virt = (np.arange(self.p) - self.root) % self.p
+        arr = baseblock_table(self.p)[virt]
+        arr.setflags(write=False)
+        return arr
+
+    # ----------------------------------------------------------- accessors
+
+    def recv_row(self, r: int) -> List[int]:
+        """Receive schedule of real rank r as a plain int list."""
+        return [int(v) for v in self.recv[r]]
+
+    def send_row(self, r: int) -> List[int]:
+        """Send schedule of real rank r as a plain int list."""
+        return [int(v) for v in self.send[r]]
+
+    def jnp_tables(self):
+        """(recv, send) as jnp arrays (lazy jax import so the pure-Python
+        consumers never pay for it).  Deliberately NOT cached on the
+        bundle: under a jit trace ``jnp.asarray`` yields trace-local
+        values, and caching one would leak it across traces."""
+        import jax.numpy as jnp
+
+        return jnp.asarray(self.recv), jnp.asarray(self.send)
+
+
+def get_bundle(p: int, root: int = 0) -> ScheduleBundle:
+    """The process-wide cached schedule bundle for axis size p and root.
+
+    Root relabeling happens here, once: real rank r plays virtual rank
+    (r - root) mod p, so the rooted tables are a row gather of the
+    cached root-0 tables.  Identity is stable while cached:
+    ``get_bundle(p, root) is get_bundle(p, root)`` (argument style and
+    int-like types are normalized before the cache lookup).
+    """
+    return _get_bundle(int(p), int(root))
+
+
+@lru_cache(maxsize=256)
+def _get_bundle(p: int, root: int) -> ScheduleBundle:
+    q = ceil_log2(p)  # validates p >= 1 with its own message
+    if not 0 <= root < p:
+        raise ValueError(f"root must be in [0, p), got root={root} p={p}")
+    skips = compute_skips(p)
+    recv0, send0 = _tables0(p)
+    if root == 0:
+        recv, send = recv0, send0
+    else:
+        virt = (np.arange(p) - root) % p
+        recv = recv0[virt]
+        send = send0[virt]
+        recv.setflags(write=False)
+        send.setflags(write=False)
+    return ScheduleBundle(p=p, root=root, q=q, skips=skips, recv=recv, send=send)
+
+
+def bundle_cache_clear() -> None:
+    """Drop all cached bundles and tables (benchmarks measure cold paths)."""
+    _get_bundle.cache_clear()
+    _tables0.cache_clear()
+
+
+def bundle_cache_info():
+    """(bundle, tables) functools cache statistics."""
+    return _get_bundle.cache_info(), _tables0.cache_info()

@@ -1,0 +1,27 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The container floor is jax 0.4.x; new call sites should import from
+here rather than sniffing ``jax``/``jax.experimental`` themselves.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map across jax versions (moved out of jax.experimental in
+    0.6; the old entry point spells ``check_vma`` as ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as legacy_shard_map
+
+    return legacy_shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

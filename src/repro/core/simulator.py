@@ -9,17 +9,11 @@ doubles as a latency/volume counter for the benchmark cost models).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from .schedule import (
-    ceil_log2,
-    compute_skips,
-    num_rounds,
-    recv_schedule,
-    send_schedule,
-    virtual_rounds,
-)
+from .engine import get_bundle
+from .schedule import num_rounds
 
 __all__ = ["simulate_broadcast", "simulate_allgather", "SimResult"]
 
@@ -33,43 +27,16 @@ class SimResult:
     buffers: Optional[list] = None   # final per-processor buffers
 
 
-def _adjusted_schedules(p: int, n: int):
-    """Per-rank recv/send schedules with the x virtual rounds folded in
-    (the two adjustment loops at the top of Algorithm 1)."""
-    q = ceil_log2(p)
-    skip = compute_skips(p)
-    x = virtual_rounds(p, n)
-    recv, send = [], []
-    for r in range(p):
-        rb = recv_schedule(p, r, skip)
-        sb = send_schedule(p, r, skip)
-        for i in range(q):
-            if i < x:
-                rb[i] += q - x
-                sb[i] += q - x
-            else:
-                rb[i] -= x
-                sb[i] -= x
-        recv.append(rb)
-        send.append(sb)
-    return recv, send, x
-
-
 def simulate_broadcast(p: int, n: int, root: int = 0, keep_buffers: bool = False) -> SimResult:
     """Algorithm 1: broadcast n blocks from ``root`` to all p processors.
 
     Simulates all rounds; asserts the final state is complete.  Block
     payloads are (block_index,) tuples so content errors are caught, not
-    just counts.  Rank renumbering handles root != 0 (paper §2.1).
+    just counts.  The rooted engine bundle indexes schedules by real
+    rank (rank renumbering of paper §2.1 folded in by the engine).
     """
-    q = ceil_log2(p)
-    skip = compute_skips(p)
-    recv, send, x = _adjusted_schedules(p, n)
-
     # buffer[r][j] holds the payload of block j at processor r (or None).
     buf: List[List[Optional[int]]] = [[None] * n for _ in range(p)]
-    virt = lambda r: (r - root) % p  # renumbering: virtual rank of real rank r
-    real = lambda v: (v + root) % p
     for j in range(n):
         buf[root][j] = j
 
@@ -78,44 +45,48 @@ def simulate_broadcast(p: int, n: int, root: int = 0, keep_buffers: bool = False
         res.buffers = buf if keep_buffers else None
         return res
 
-    # Working copies of the per-round block indices; incremented by q after
-    # each use exactly as in Algorithm 1 (schedules indexed by virtual rank).
-    rb = [list(recv[v]) for v in range(p)]
-    sb = [list(send[v]) for v in range(p)]
+    bundle = get_bundle(p, root)
+    q, skip = bundle.q, bundle.skips
+    x = bundle.virtual_rounds(n)
+    # Working copies of the per-round block indices (x virtual rounds
+    # folded in); incremented by q after each use exactly as in
+    # Algorithm 1.  Rows are indexed by REAL rank.
+    recv_adj, send_adj = bundle.adjusted_tables(n)
+    rb = recv_adj.tolist()
+    sb = send_adj.tolist()
 
     for i in range(x, n + q - 1 + x):
         k = i % q
         # Gather the messages of this round first (synchronous round model):
-        # each VIRTUAL rank v sends buf[real(v)][sb[v][k]] to virtual (v+skip)
-        msgs: List[Tuple[int, int, Optional[int]]] = []  # (dst_real, blk, payload)
-        for v in range(p):
-            blk = sb[v][k]
-            tv = (v + skip[k]) % p
-            if blk < 0 or tv == 0:
+        # rank r sends buf[r][sb[r][k]] to (r + skip[k]) % p.
+        msgs: List[Tuple[int, int, Optional[int]]] = []  # (dst, blk, payload)
+        for r in range(p):
+            blk = sb[r][k]
+            t = (r + skip[k]) % p
+            if blk < 0 or t == root:
                 continue  # nonexistent block / never send to the root
             blk_eff = min(blk, n - 1)
-            payload = buf[real(v)][blk_eff]
+            payload = buf[r][blk_eff]
             assert payload is not None, (
-                f"p={p} n={n} round={i} k={k}: rank v={v} must send block "
+                f"p={p} n={n} round={i} k={k}: rank {r} must send block "
                 f"{blk_eff} it does not have"
             )
-            msgs.append((real(tv), blk_eff, payload))
+            msgs.append((t, blk_eff, payload))
         for dst, blk, payload in msgs:
-            v = virt(dst)
-            rblk = rb[v][k]
-            assert rblk >= 0, f"receiver v={v} got unexpected block in round {i}"
+            rblk = rb[dst][k]
+            assert rblk >= 0, f"receiver {dst} got unexpected block in round {i}"
             rblk_eff = min(rblk, n - 1)
             assert rblk_eff == blk, (
-                f"p={p} n={n} round={i}: rank v={v} expected block {rblk_eff}, "
+                f"p={p} n={n} round={i}: rank {dst} expected block {rblk_eff}, "
                 f"got {blk}"
             )
             assert payload == blk, "payload corrupted"
             buf[dst][blk] = payload
             res.messages += 1
             res.blocks_moved += 1
-        for v in range(p):
-            sb[v][k] += q
-            rb[v][k] += q
+        for r in range(p):
+            sb[r][k] += q
+            rb[r][k] += q
         res.rounds += 1
 
     for r in range(p):
@@ -138,9 +109,10 @@ def simulate_allgather(
     sizes[j] if given; sizes only affect the volume counter).  Verifies
     that after n-1+q rounds every processor holds all p*n blocks.
     """
-    q = ceil_log2(p)
-    skip = compute_skips(p)
-    recv, _, x = _adjusted_schedules(p, n)
+    bundle = get_bundle(p)
+    q, skip = bundle.q, bundle.skips
+    x = bundle.virtual_rounds(n)
+    recv = bundle.adjusted_tables(n)[0].tolist()
 
     # recvblocks[r][j][k]: schedule of rank r for root j = recv of (r-j) mod p
     # sendblocks[r][j][k] = recvblocks[f^k][j][k] with f^k = (r - skip[k]) % p

@@ -23,7 +23,13 @@ from typing import List, Sequence
 
 from .schedule import baseblock, ceil_log2, compute_skips
 
-__all__ = ["verify_schedules", "verify_p", "check_condition_3", "check_condition_4"]
+__all__ = [
+    "verify_schedules",
+    "verify_bundle",
+    "verify_p",
+    "check_condition_3",
+    "check_condition_4",
+]
 
 
 def check_condition_3(recv: Sequence[int], b: int, q: int) -> bool:
@@ -86,9 +92,21 @@ def verify_schedules(
             )
 
 
-def verify_p(p: int) -> None:
-    """Compute schedules with the O(log p) algorithms and verify them."""
-    from .schedule import schedule_tables
+def verify_bundle(bundle) -> None:
+    """Verify a :class:`repro.core.engine.ScheduleBundle` (any root).
 
-    recv, send = schedule_tables(p)
+    Bundle rows are indexed by real rank with the root relabeling folded
+    in; the four conditions are stated in virtual numbering, so un-rotate
+    the rows (virtual rank v is real rank (v + root) mod p) and check.
+    """
+    p, root = bundle.p, bundle.root
+    recv = [bundle.recv_row((v + root) % p) for v in range(p)]
+    send = [bundle.send_row((v + root) % p) for v in range(p)]
     verify_schedules(p, recv, send)
+
+
+def verify_p(p: int) -> None:
+    """Compute schedules through the cached engine and verify them."""
+    from .engine import get_bundle
+
+    verify_bundle(get_bundle(p))

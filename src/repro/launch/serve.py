@@ -20,6 +20,8 @@ import argparse
 import time
 
 import jax
+
+from repro.launch.mesh import set_global_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -52,7 +54,7 @@ def main():
 
     mesh = build_mesh(args.mesh)
     dp_axes, model_axis = mesh_axes(mesh)
-    jax.sharding.set_mesh(mesh)
+    set_global_mesh(mesh)
     hints.set_hint("hidden", P(dp_axes, None, None))
     cfg = get_config(args.arch, smoke=args.smoke)
     print(f"mesh {dict(mesh.shape)}  model {cfg.name}")

@@ -24,6 +24,8 @@ import argparse
 import time
 
 import jax
+
+from repro.launch.mesh import set_global_mesh
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -64,7 +66,7 @@ def main():
     mesh = build_mesh(args.mesh)
     dp_axes, model_axis = mesh_axes(mesh)
     dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
-    jax.sharding.set_mesh(mesh)
+    set_global_mesh(mesh)
     hints.set_hint("hidden", P(dp_axes, None, None))
     hints.set_hint("logits", P(dp_axes, None, model_axis))
     print(f"mesh {dict(mesh.shape)}  dp={dp}")
@@ -92,9 +94,14 @@ def main():
     })
     bnamed = named(mesh, bspecs)
 
+    # Pin the output state to the same ZeRO-3/TP specs as the input:
+    # without out_shardings GSPMD may pick a different layout for some
+    # leaves after step 1, which then mismatches in_shardings (and
+    # silently drifts the state layout on any jax version).
     step_fn = jax.jit(
         make_train_step(cfg, tcfg),
         in_shardings=(named(mesh, state_specs), bnamed),
+        out_shardings=(named(mesh, state_specs), None),
         donate_argnums=(0,),
     )
 

@@ -25,6 +25,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.collectives import circulant_broadcast
 from repro.core.costmodel import CommModel, optimal_num_blocks_bcast
+from repro.core.engine import get_bundle
+
+
+def restore_plan(p: int, nbytes: int, *, root: int = 0,
+                 model: CommModel = CommModel(alpha=2e-6, beta=1.0 / 25e9),
+                 n_blocks: Optional[int] = None):
+    """Host-side plan for a restore fan-out: (bundle, n, rounds).
+
+    Computes the alpha-beta-optimal block count n* for the checkpoint
+    size and pre-warms the process-wide schedule cache for ``(p, root)``
+    -- on an elastic restore (p changed since the last run) this is the
+    only schedule work, O(p log p) once, before any device code runs.
+    """
+    bundle = get_bundle(p, root)
+    n = n_blocks or max(1, optimal_num_blocks_bcast(p, nbytes, model))
+    return bundle, n, bundle.rounds(n)
 
 
 def broadcast_state(
@@ -55,7 +71,7 @@ def broadcast_state(
     sizes = [f.shape[1] for f in flats]
     big = jnp.concatenate(flats, axis=1)                      # [p, total]
     nbytes = big.shape[1] * 4
-    n = n_blocks or max(1, optimal_num_blocks_bcast(p, nbytes, model))
+    _, n, _ = restore_plan(p, nbytes, root=root, model=model, n_blocks=n_blocks)
     out = circulant_broadcast(mesh, axis_name, big, n_blocks=n, root=root)
     outs = []
     off = 0

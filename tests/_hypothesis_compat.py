@@ -1,0 +1,68 @@
+"""Optional-hypothesis shim: property tests degrade to deterministic smoke.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).  When
+it is installed, this module re-exports the real ``given`` / ``settings``
+/ ``strategies``.  When it is not, a miniature deterministic sampler
+stands in: each ``@given`` test runs a fixed number of pseudo-random
+examples drawn from a generator seeded with the test's qualified name,
+so collection never fails and the property still gets exercised (just
+without shrinking or the full search).
+
+Only the strategy combinators the test-suite actually uses are
+implemented (integers, sampled_from, booleans).
+"""
+
+try:  # pragma: no cover - trivially one branch per environment
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class st:  # noqa: N801 - mimics the hypothesis.strategies module name
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def settings(*args, **kwargs):
+        def deco(f):
+            return f
+
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        assert not kw_strategies, "fallback shim supports positional strategies"
+
+        def deco(f):
+            # No functools.wraps: pytest must see a zero-argument callable,
+            # not the strategy-typed signature of the wrapped property.
+            def runner():
+                rng = random.Random(f.__qualname__)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    f(*(s.example(rng) for s in strategies))
+
+            runner.__name__ = f.__name__
+            runner.__doc__ = f.__doc__
+            runner.__module__ = f.__module__
+            return runner
+
+        return deco

@@ -83,6 +83,7 @@ def check_allgatherv(p, n_blocks, sizes, dtype=jnp.int32):
 
 def check_compressed_allreduce(p, elems=2048):
     from jax.sharding import PartitionSpec as P
+    from repro.core.jaxcompat import shard_map
     from repro.optim.compression import compressed_allreduce_tree, init_error_state
 
     mesh = make_mesh(p)
@@ -97,7 +98,7 @@ def check_compressed_allreduce(p, elems=2048):
         return red["w"][None]
 
     out = jax.jit(
-        jax.shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+        shard_map(body, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
     )(x)
     expect = data.mean(axis=0)
     got = np.asarray(out)

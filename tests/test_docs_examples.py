@@ -1,0 +1,63 @@
+"""Docs check: every ```python block in docs/*.md (and README.md) runs.
+
+Blocks within one file execute sequentially in a shared namespace, so
+later examples may build on earlier imports/variables exactly as a
+reader would run them top to bottom.  Fenced languages other than
+``python`` (bash, text, ...) are ignored.
+"""
+
+import os
+import re
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def _doc_files():
+    docs_dir = os.path.join(ROOT, "docs")
+    files = [os.path.join(ROOT, "README.md")]
+    if os.path.isdir(docs_dir):
+        files += sorted(
+            os.path.join(docs_dir, f)
+            for f in os.listdir(docs_dir)
+            if f.endswith(".md")
+        )
+    return [f for f in files if os.path.exists(f)]
+
+
+def extract_python_blocks(path):
+    """[(start_line, source), ...] for every ```python fence in the file."""
+    blocks = []
+    lang, buf, start = None, [], 0
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            m = _FENCE.match(line.strip())
+            if m and lang is None:
+                lang, buf, start = m.group(1) or "text", [], lineno + 1
+            elif line.strip() == "```" and lang is not None:
+                if lang == "python":
+                    blocks.append((start, "".join(buf)))
+                lang = None
+            elif lang is not None:
+                buf.append(line)
+    return blocks
+
+
+@pytest.mark.parametrize(
+    "path", _doc_files(), ids=lambda p: os.path.relpath(p, ROOT)
+)
+def test_docs_code_blocks_execute(path):
+    blocks = extract_python_blocks(path)
+    if not blocks:
+        pytest.skip(f"no python blocks in {os.path.relpath(path, ROOT)}")
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    ns = {"__name__": "__docs__"}
+    for start, src in blocks:
+        code = compile(src, f"{os.path.relpath(path, ROOT)}:{start}", "exec")
+        exec(code, ns)  # noqa: S102 - executing our own documentation

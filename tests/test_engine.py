@@ -1,0 +1,192 @@
+"""Engine tests: ScheduleBundle round-trips, caching, and edge cases.
+
+The engine's batched tables must agree bit-for-bit with the per-rank
+O(log p) algorithms (Algorithms 3-9) for every p, every root: the
+per-rank functions are the paper-faithful ground truth, the engine is
+the production path every consumer actually uses.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    ScheduleBundle,
+    baseblock_table,
+    bundle_cache_clear,
+    bundle_cache_info,
+    get_bundle,
+)
+from repro.core.schedule import (
+    baseblock,
+    ceil_log2,
+    compute_skips,
+    num_rounds,
+    recv_schedule,
+    send_schedule,
+    virtual_rounds,
+)
+from repro.core.verify import verify_bundle
+
+
+# ------------------------------------------------------------- round-trip
+
+
+@pytest.mark.parametrize("p", list(range(1, 65)))
+def test_bundle_round_trips_per_rank_algorithms(p):
+    """Acceptance: engine == recv_schedule/send_schedule for p in 1..64
+    and roots {0, 1, p-1} (rows relabeled to real ranks)."""
+    skip = compute_skips(p)
+    for root in sorted({0, 1 % p, p - 1}):
+        bundle = get_bundle(p, root)
+        assert (bundle.p, bundle.root, bundle.q) == (p, root, ceil_log2(p))
+        assert bundle.skips == skip
+        assert bundle.recv.shape == bundle.send.shape == (p, bundle.q)
+        for r in range(p):
+            v = (r - root) % p  # virtual rank of real rank r
+            assert bundle.recv_row(r) == recv_schedule(p, v, skip)
+            assert bundle.send_row(r) == send_schedule(p, v, skip)
+
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 8, 11, 16, 32, 36, 64, 100, 1024])
+def test_bundle_satisfies_correctness_conditions(p):
+    verify_bundle(get_bundle(p))
+
+
+@pytest.mark.parametrize("p", [3, 5, 11, 36])
+def test_bundle_nonzero_roots_satisfy_conditions(p):
+    for root in range(p):
+        verify_bundle(get_bundle(p, root))
+
+
+def test_baseblock_table_matches_scalar():
+    for p in [1, 2, 3, 5, 11, 36, 64, 100, 257]:
+        q = ceil_log2(p)
+        skip = compute_skips(p)
+        expect = [baseblock(r, skip, q) for r in range(p)]
+        assert baseblock_table(p).tolist() == expect
+
+
+# ------------------------------------------------------------ edge cases
+
+
+def test_p1_trivial_bundle():
+    b = get_bundle(1)
+    assert b.q == 0
+    assert b.recv.shape == b.send.shape == (1, 0)
+    assert b.rounds(7) == 0
+    assert b.round_plan(1) == []
+    assert b.baseblocks.tolist() == [0]  # q == 0: the root's baseblock is q
+
+
+def test_p2_single_round():
+    b = get_bundle(2)
+    assert b.q == 1
+    assert b.recv_row(0) == [-1] and b.recv_row(1) == [0]
+    assert b.send_row(0) == [0]
+    assert b.rounds(3) == 3
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 32, 64])
+def test_powers_of_two_baseblock_is_lowest_set_bit(p):
+    b = get_bundle(p)
+    bb = b.baseblocks
+    assert bb[0] == b.q
+    for r in range(1, p):
+        assert bb[r] == (r & -r).bit_length() - 1
+
+
+def test_invalid_root_rejected():
+    with pytest.raises(ValueError):
+        get_bundle(5, 5)
+    with pytest.raises(ValueError):
+        get_bundle(5, -1)
+
+
+# --------------------------------------------------------------- caching
+
+
+def test_cache_hit_identity():
+    bundle_cache_clear()
+    assert get_bundle(36) is get_bundle(36)
+    assert get_bundle(36, 7) is get_bundle(36, 7)
+    assert get_bundle(36) is not get_bundle(36, 7)
+    info, _ = bundle_cache_info()
+    assert info.hits >= 2
+
+
+def test_rooted_bundles_share_table_computation():
+    bundle_cache_clear()
+    get_bundle(17, 1)
+    get_bundle(17, 5)
+    _, tables_info = bundle_cache_info()
+    assert tables_info.misses == 1  # root-0 tables computed once, rotated twice
+
+
+def test_tables_are_immutable():
+    b = get_bundle(11)
+    with pytest.raises(ValueError):
+        b.recv[0, 0] = 99
+    with pytest.raises(ValueError):
+        b.neighbors_out[0, 0] = 99
+
+
+# ----------------------------------------------------- derived structures
+
+
+@pytest.mark.parametrize("p", [2, 3, 5, 11, 17, 36])
+def test_neighbors_tables(p):
+    b = get_bundle(p)
+    for r in range(p):
+        for k in range(b.q):
+            assert b.neighbors_out[r][k] == (r + b.skips[k]) % p
+            assert b.neighbors_in[r][k] == (r - b.skips[k]) % p
+    # every round's edge set is a perfect matching of senders to receivers
+    for k in range(b.q):
+        assert sorted(b.neighbors_out[:, k]) == list(range(p))
+
+
+@pytest.mark.parametrize("p", [2, 5, 11, 17])
+@pytest.mark.parametrize("n", [1, 2, 5, 9])
+def test_round_plan_structure(p, n):
+    b = get_bundle(p)
+    plan = b.round_plan(n)
+    assert len(plan) == b.rounds(n) == num_rounds(p, n)
+    x = b.virtual_rounds(n)
+    assert x == virtual_rounds(p, n)
+    ks = [k for k, _ in plan]
+    assert ks[0] == x % b.q
+    # k cycles through 0..q-1; offsets are multiples-of-q shifted by -x
+    for i, (k, off) in enumerate(plan):
+        assert k == (x + i) % b.q
+        assert (off + x) % b.q == 0
+
+
+@pytest.mark.parametrize("p", [2, 5, 11, 36])
+@pytest.mark.parametrize("n", [1, 3, 8])
+def test_adjusted_tables_match_algorithm1_folding(p, n):
+    b = get_bundle(p)
+    x = b.virtual_rounds(n)
+    recv_adj, send_adj = b.adjusted_tables(n)
+    for r in range(p):
+        for i in range(b.q):
+            d = b.q - x if i < x else -x
+            assert recv_adj[r][i] == b.recv[r][i] + d
+            assert send_adj[r][i] == b.send[r][i] + d
+    # returned copies are writable (the simulator mutates them in place)
+    recv_adj[0, 0] = 42
+
+
+def test_jnp_tables_match_numpy():
+    b = get_bundle(13)
+    jr, js = b.jnp_tables()
+    np.testing.assert_array_equal(np.asarray(jr), b.recv)
+    np.testing.assert_array_equal(np.asarray(js), b.send)
+
+
+def test_engine_drives_simulator_all_roots():
+    from repro.core.simulator import simulate_broadcast
+
+    for p in [3, 5, 11, 36]:
+        for root in {0, 1, p // 2, p - 1}:
+            res = simulate_broadcast(p, 4, root=root)
+            assert res.rounds == res.optimal_rounds

@@ -9,7 +9,7 @@ Anchored on the paper's own artifacts:
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.schedule import (
     baseblock,

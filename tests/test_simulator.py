@@ -2,7 +2,7 @@
 (all-to-all broadcast): payload-checked delivery in exactly n-1+q rounds."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.simulator import simulate_allgather, simulate_broadcast
 
