@@ -40,6 +40,12 @@ def main() -> None:
 
         allgatherv_bench.main()
 
+    if which in ("allreduce", "all"):
+        print("# === Reversed family: all-reduction vs classic algorithms ===")
+        from benchmarks import allreduce_bench
+
+        allreduce_bench.main()
+
     if which in ("verify", "all"):
         print("# === Correctness sweep (paper section 3 verification) ===")
         from repro.core.verify import verify_p
@@ -49,7 +55,7 @@ def main() -> None:
         for p in ps:
             verify_p(p)
         print(f"verify,{len(ps)}_values_of_p_up_to_{max(ps)},"
-              f"{time.time()-t:.1f}s,all_four_conditions_hold")
+              f"{time.time()-t:.1f}s,forward_and_reversed_conditions_hold")
 
     print(f"# total {time.time()-t0:.1f}s")
 

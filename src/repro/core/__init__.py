@@ -1,9 +1,13 @@
-"""Core: round-optimal n-block broadcast schedules (Träff 2023) in O(log p).
+"""Core: round-optimal n-block broadcast schedules (Träff 2023) in O(log p),
+plus the reversed-schedule collective family (reduction / all-reduction /
+all-broadcast, arXiv:2407.18004) on the same cached engine.
 
 Public API:
     get_bundle, ScheduleBundle (the cached schedule engine -- preferred)
     compute_skips, baseblock, recv_schedule, send_schedule, schedule_tables
-    verify_schedules, verify_bundle, simulate_broadcast, simulate_allgather
+    verify_schedules, verify_reversed_schedules, verify_bundle
+    simulate_broadcast, simulate_allgather, simulate_allbroadcast,
+    simulate_reduce, simulate_allreduce
 """
 
 from .engine import ScheduleBundle, get_bundle
@@ -17,8 +21,20 @@ from .schedule import (
     send_schedule,
     virtual_rounds,
 )
-from .simulator import SimResult, simulate_allgather, simulate_broadcast
-from .verify import verify_bundle, verify_p, verify_schedules
+from .simulator import (
+    SimResult,
+    simulate_allbroadcast,
+    simulate_allgather,
+    simulate_allreduce,
+    simulate_broadcast,
+    simulate_reduce,
+)
+from .verify import (
+    verify_bundle,
+    verify_p,
+    verify_reversed_schedules,
+    verify_schedules,
+)
 
 __all__ = [
     "ScheduleBundle",
@@ -33,8 +49,12 @@ __all__ = [
     "send_schedule",
     "virtual_rounds",
     "SimResult",
+    "simulate_allbroadcast",
     "simulate_allgather",
+    "simulate_allreduce",
     "simulate_broadcast",
+    "simulate_reduce",
     "verify_p",
+    "verify_reversed_schedules",
     "verify_schedules",
 ]

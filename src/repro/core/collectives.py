@@ -38,7 +38,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .costmodel import CommModel, optimal_num_blocks_allgather, optimal_num_blocks_bcast
+from .costmodel import (
+    CommModel,
+    optimal_num_blocks_allgather,
+    optimal_num_blocks_bcast,
+    optimal_num_blocks_reduce,
+)
 from .engine import ScheduleBundle, get_bundle
 from .jaxcompat import shard_map as _shard_map
 
@@ -46,6 +51,9 @@ __all__ = [
     "circulant_broadcast",
     "circulant_allgather",
     "circulant_allgatherv",
+    "circulant_allbroadcast",
+    "circulant_reduce",
+    "circulant_allreduce",
     "ring_allgather",
     "CirculantTables",
     "build_tables",
@@ -383,6 +391,171 @@ def circulant_reduce_scatter(
         body, mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name)
     )
     return shard_fn(x)
+
+
+# ------------------------------------- reversed-schedule collective family
+#
+# The recv/send schedules are time-reversible (Träff, arXiv:2407.18004):
+# replaying the broadcast rounds backwards (t -> R-1-t) with every edge
+# flipped turns the round-optimal broadcast into a round-optimal
+# *reduction*, and composing reduction + broadcast yields all-reduction
+# in 2(n-1)+2*ceil(log2 p) rounds.  The reversed tables come from the
+# same cached bundle (engine rev_recv/rev_send: the forward tables with
+# roles swapped -- no second table build).
+
+
+def _op_combine(op: str):
+    if op in ("sum", "+"):
+        return jnp.add
+    if op == "max":
+        return jnp.maximum
+    raise ValueError(f"unsupported reduction op {op!r} (use 'sum' or 'max')")
+
+
+def _op_identity(op: str, dtype) -> jnp.ndarray:
+    """Scalar identity of ``op`` in ``dtype`` (drained partials hold it)."""
+    if op in ("sum", "+"):
+        return jnp.zeros((), dtype)
+    if jnp.issubdtype(dtype, jnp.inexact):
+        return jnp.asarray(-jnp.inf, dtype)
+    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+
+
+def circulant_reduce(
+    mesh: Mesh,
+    axis_name: str,
+    x: jax.Array,
+    *,
+    n_blocks: Optional[int] = None,
+    root: int = 0,
+    op: str = "sum",
+    model: CommModel = CommModel(),
+):
+    """Round-optimal n-block reduction to ``root`` (reversed Algorithm 1).
+
+    ``x`` has a leading axis of size p sharded over ``axis_name`` (each
+    rank owns one slice).  Returns an array of the same spec where the
+    root's slice is the elementwise op-reduction of all slices and every
+    other slice is zero.  Runs in n-1+ceil(log2 p) ppermute rounds: the
+    reversed round for forward round (k, off) sends the partial of the
+    forward-*received* block to the forward from-neighbor (rotation by
+    -skip[k]) and accumulates the incoming partial into the
+    forward-*sent* block.  Partials are drained after each forward
+    (capture - drain - accumulate), so final-phase capped re-sends move
+    an already-emptied (identity) partial and every contribution reaches
+    the root exactly once.
+    """
+    p = mesh.shape[axis_name]
+    if p == 1:
+        return x
+    bundle = get_bundle(p, root)
+    if x.shape[0] != p:
+        raise ValueError("x must have leading axis == axis size (one slice/rank)")
+    combine = _op_combine(op)
+    elems = int(np.prod(x.shape[1:]))
+    n = n_blocks or max(1, optimal_num_blocks_reduce(p, elems * x.dtype.itemsize, model))
+    n = min(n, max(1, elems))
+    recv_t, send_t = bundle.jnp_tables()
+    rounds = bundle.reversed_round_plan(n)
+    ident = _op_identity(op, x.dtype)
+
+    def body(xs):
+        r = jax.lax.axis_index(axis_name)
+        flat = xs.reshape(-1)
+        buf, bs, pad = _split_blocks(flat, n)
+        ident_blk = jnp.full((1, bs), ident, buf.dtype)
+        # Reversed roles: forward recv entries say what r forwards,
+        # forward send entries say what r accumulates.
+        my_fwd = recv_t[r]
+        my_acc = send_t[r]
+        is_root = r == root
+        for (k, off) in rounds:
+            sb = my_fwd[k] + off
+            ab = my_acc[k] + off
+            send_slot = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
+            acc_slot = jnp.where(ab < 0, n, jnp.minimum(ab, n - 1))
+            out_blk = jax.lax.dynamic_slice_in_dim(buf, send_slot, 1, axis=0)
+            # The root never forwards: forward rounds never send TO the
+            # root, so reversed rounds never send FROM it (phase offsets
+            # can lift its negative entries in capped rounds -- those were
+            # the suppressed redundant re-sends).  It ships the identity
+            # instead, and drains only the garbage slot.
+            out_blk = jnp.where(is_root, ident_blk, out_blk)
+            drain_slot = jnp.where(is_root, n, send_slot)
+            # Drain after capture: the partial leaves this rank for good.
+            buf = jax.lax.dynamic_update_slice_in_dim(
+                buf, ident_blk, drain_slot, axis=0
+            )
+            got = jax.lax.ppermute(
+                out_blk, axis_name, _rot_perm(p, (p - bundle.skip[k]) % p)
+            )
+            cur = jax.lax.dynamic_slice_in_dim(buf, acc_slot, 1, axis=0)
+            buf = jax.lax.dynamic_update_slice_in_dim(
+                buf, combine(cur, got), acc_slot, axis=0
+            )
+        out = buf[:n].reshape(-1)[: flat.shape[0]].reshape(xs.shape)
+        return jnp.where(r == root, out, jnp.zeros_like(out))
+
+    shard = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=P(axis_name),
+        out_specs=P(axis_name),
+    )
+    return shard(x)
+
+
+def circulant_allreduce(
+    mesh: Mesh,
+    axis_name: str,
+    x: jax.Array,
+    *,
+    n_blocks: Optional[int] = None,
+    root: int = 0,
+    op: str = "sum",
+    model: CommModel = CommModel(),
+):
+    """All-reduction in 2(n-1)+2*ceil(log2 p) ppermute rounds.
+
+    Reduce to ``root`` on the reversed schedule, then broadcast the
+    result back on the forward schedule -- both phases run on the same
+    cached ``get_bundle(p, root)`` tables and the same block count n, so
+    the composition is exactly twice the optimal single-collective round
+    count.  ``x`` is [p, ...] sharded over ``axis_name``; every output
+    slice equals the elementwise op-reduction of all input slices.
+    """
+    p = mesh.shape[axis_name]
+    if p == 1:
+        return x
+    if x.shape[0] != p:
+        raise ValueError("x must have leading axis == axis size (one slice/rank)")
+    elems = int(np.prod(x.shape[1:]))
+    n = n_blocks or max(1, optimal_num_blocks_reduce(p, elems * x.dtype.itemsize, model))
+    n = min(n, max(1, elems))
+    red = circulant_reduce(
+        mesh, axis_name, x, n_blocks=n, root=root, op=op, model=model
+    )
+    return circulant_broadcast(
+        mesh, axis_name, red, n_blocks=n, root=root, model=model
+    )
+
+
+def circulant_allbroadcast(
+    mesh: Mesh,
+    axis_name: str,
+    x: jax.Array,
+    *,
+    n_blocks: Optional[int] = None,
+    model: CommModel = CommModel(),
+):
+    """All-broadcast: every rank's slice reaches every rank (n-1+q rounds).
+
+    The collective-family name (arXiv:2407.18004) for the all-to-all
+    broadcast; identical to :func:`circulant_allgather` -- each rank acts
+    as the root of its own forward broadcast, all p interleaved on the
+    same circulant graph with one packed message per round.
+    """
+    return circulant_allgather(mesh, axis_name, x, n_blocks=n_blocks, model=model)
 
 
 # ----------------------------------------------------------- ring baseline

@@ -27,8 +27,15 @@ __all__ = [
     "allgather_circulant_cost",
     "allgather_ring_cost",
     "allgather_bruck_cost",
+    "reduce_circulant_cost",
+    "reduce_binomial_cost",
+    "allreduce_circulant_cost",
+    "allreduce_ring_cost",
+    "allreduce_recursive_doubling_cost",
     "optimal_num_blocks_bcast",
     "optimal_num_blocks_allgather",
+    "optimal_num_blocks_reduce",
+    "optimal_num_blocks_allreduce",
 ]
 
 
@@ -107,6 +114,46 @@ def allgather_bruck_cost(p: int, m: float, model: CommModel) -> float:
     return total
 
 
+# -------------------------- reversed-schedule family (arXiv:2407.18004)
+
+
+def reduce_circulant_cost(p: int, m: float, n: int, model: CommModel) -> float:
+    """n-block circulant reduction: the time-reversed broadcast, so the
+    identical n-1+q rounds of ceil(m/n)-byte messages (reduction work is
+    off the critical path in the alpha-beta model)."""
+    return bcast_circulant_cost(p, m, n, model)
+
+
+def reduce_binomial_cost(p: int, m: float, model: CommModel) -> float:
+    """Binomial-tree reduction: q rounds of the full message (the
+    reversed binomial broadcast)."""
+    return bcast_binomial_cost(p, m, model)
+
+
+def allreduce_circulant_cost(p: int, m: float, n: int, model: CommModel) -> float:
+    """Circulant all-reduction: reversed reduce + forward broadcast
+    pipelined on the same schedule, 2(n-1)+2q rounds of ceil(m/n)."""
+    if p == 1:
+        return 0.0
+    q = ceil_log2(p)
+    return 2 * (n - 1 + q) * model.msg(math.ceil(m / n))
+
+
+def allreduce_ring_cost(p: int, m: float, model: CommModel) -> float:
+    """Ring all-reduce: reduce-scatter + allgather, 2(p-1) rounds of m/p
+    (bandwidth-optimal, latency-bound at 2(p-1) messages)."""
+    if p == 1:
+        return 0.0
+    return 2 * (p - 1) * model.msg(m / p)
+
+
+def allreduce_recursive_doubling_cost(p: int, m: float, model: CommModel) -> float:
+    """Recursive-doubling all-reduce: q rounds of the full message."""
+    if p == 1:
+        return 0.0
+    return ceil_log2(p) * model.msg(m)
+
+
 def optimal_num_blocks_bcast(p: int, m: float, model: CommModel) -> int:
     """Analytic optimum of (n-1+q)(alpha + beta*m/n) over n.
 
@@ -122,6 +169,24 @@ def optimal_num_blocks_bcast(p: int, m: float, model: CommModel) -> int:
         return 1
     n = math.sqrt(max(q - 1, 1) * model.beta * m / model.alpha)
     return max(1, min(int(round(n)), int(m)))
+
+
+def optimal_num_blocks_reduce(p: int, m: float, model: CommModel) -> int:
+    """Analytic optimum for the circulant reduction block count.
+
+    The reversed schedule has the forward round structure, so the
+    broadcast optimum n* = sqrt((q-1) beta m / alpha) carries over.
+    """
+    return optimal_num_blocks_bcast(p, m, model)
+
+
+def optimal_num_blocks_allreduce(p: int, m: float, model: CommModel) -> int:
+    """Analytic optimum for the composed all-reduction.
+
+    Minimizing 2(n-1+q)(alpha + beta m/n) gives the same n* as a single
+    phase -- the factor 2 scales the cost, not the argmin.
+    """
+    return optimal_num_blocks_bcast(p, m, model)
 
 
 def optimal_num_blocks_allgather(p: int, m: float, model: CommModel) -> int:

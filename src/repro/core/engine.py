@@ -170,6 +170,86 @@ class ScheduleBundle:
             out.append((k, q * ((i - k) // q) - x))
         return out
 
+    # ------------------------------------------------ reversed (reduction) side
+    #
+    # The recv/send schedules are time-reversible (Träff, arXiv:2407.18004):
+    # running the broadcast backwards -- reduction round t replays forward
+    # round R-1-t with every edge's direction flipped -- turns the
+    # round-optimal broadcast into a round-optimal *reduction* toward the
+    # root, and composing reduction + broadcast gives all-reduction in
+    # 2(n-1) + 2q rounds on the same circulant graph.  Under the reversal
+    # the table roles swap: the block a rank *received* in forward round k
+    # is the partial it *forwards* in the reversed round, and the block it
+    # *sent* forward is the contribution it *accumulates* coming back.  So
+    # the reversed tables are the forward tables with recv/send exchanged
+    # and the communication direction negated -- served from this very
+    # bundle (same cache entry, no second O(p log p) build).
+
+    @property
+    def rev_recv(self) -> np.ndarray:
+        """[p, q] reversed-schedule receive table: the block real rank r
+        *accumulates* in the reversed round of column k (== forward
+        ``send``; the contribution flows back along the edge r sent on)."""
+        return self.send
+
+    @property
+    def rev_send(self) -> np.ndarray:
+        """[p, q] reversed-schedule send table: the partial real rank r
+        *forwards* in the reversed round of column k (== forward ``recv``;
+        negative at the root, which only accumulates)."""
+        return self.recv
+
+    @property
+    def rev_neighbors_out(self) -> np.ndarray:
+        """[p, q] reversed to-processors (== forward ``neighbors_in``:
+        partials travel against the broadcast edges)."""
+        return self.neighbors_in
+
+    @property
+    def rev_neighbors_in(self) -> np.ndarray:
+        """[p, q] reversed from-processors (== forward ``neighbors_out``)."""
+        return self.neighbors_out
+
+    def reversed_round_plan(self, n: int) -> List[Tuple[int, int]]:
+        """Round reindexing t -> R-1-t of :meth:`round_plan`.
+
+        Entry t gives the (k, offset) of the forward round R-1-t; the
+        reversed round t moves effective blocks ``rev_sched[r][k] + offset``
+        along the *negated* skip (rank r sends to (r - skip[k]) % p).
+        """
+        return list(reversed(self.round_plan(n)))
+
+    def reversed_per_round_tables(
+        self, n: int
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-round reversed tables: (fwd_blocks, acc_blocks, ks).
+
+        ``fwd_blocks[t, r]``: effective block index whose partial rank r
+        forwards in reduction round t (to ``(r - skip[ks[t]]) % p``);
+        ``acc_blocks[t, r]``: effective block index rank r accumulates
+        (from ``(r + skip[ks[t]]) % p``); ``ks[t]``: the skip column of
+        round t.  Negative entries mean "idle this round"; entries > n-1
+        are capped to n-1 by consumers (final-phase re-sends -- harmless
+        for reduction because partials are drained after each forward).
+
+        Derived *vectorized* from the cached forward tables: one column
+        gather ``tab[:, ks].T`` plus the per-round offset broadcast -- no
+        per-rank recomputation (Correctness Condition 2 guarantees
+        ``fwd_blocks`` of the sender equals ``acc_blocks`` of its
+        receiver entry-for-entry).
+        """
+        plan = self.reversed_round_plan(n)
+        ks = np.asarray([k for k, _ in plan], dtype=np.int64)
+        offs = np.asarray([off for _, off in plan], dtype=np.int64)
+        fwd = self.rev_send[:, ks].T.astype(np.int64) + offs[:, None]
+        acc = self.rev_recv[:, ks].T.astype(np.int64) + offs[:, None]
+        return fwd, acc, ks
+
+    def allreduce_rounds(self, n: int) -> int:
+        """Round count of the composed reduce+broadcast all-reduction:
+        2(n-1) + 2*ceil(log2 p) (0 if p == 1)."""
+        return 2 * self.rounds(n)
+
     def adjusted_tables(self, n: int) -> Tuple[np.ndarray, np.ndarray]:
         """(recv, send) with the x virtual rounds folded into the entries.
 
@@ -228,6 +308,14 @@ class ScheduleBundle:
     def send_row(self, r: int) -> List[int]:
         """Send schedule of real rank r as a plain int list."""
         return [int(v) for v in self.send[r]]
+
+    def rev_recv_row(self, r: int) -> List[int]:
+        """Reversed (reduction) receive schedule of real rank r."""
+        return [int(v) for v in self.rev_recv[r]]
+
+    def rev_send_row(self, r: int) -> List[int]:
+        """Reversed (reduction) send schedule of real rank r."""
+        return [int(v) for v in self.rev_send[r]]
 
     def jnp_tables(self):
         """(recv, send) as jnp arrays (lazy jax import so the pure-Python

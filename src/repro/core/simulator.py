@@ -1,10 +1,13 @@
-"""Round-based message-passing simulator for Algorithm 1 and Algorithm 2.
+"""Round-based message-passing simulator for the whole collective family.
 
-Executes the paper's broadcast / all-to-all broadcast algorithms over a
-simulated fully-connected, one-ported, bidirectional network and checks
-that after exactly n-1+q rounds every processor holds every block.  This
-is the end-to-end functional oracle for the schedule constructions (and
-doubles as a latency/volume counter for the benchmark cost models).
+Executes the paper's broadcast / all-to-all broadcast algorithms -- and,
+via the time-reversed schedules (Träff, arXiv:2407.18004), the derived
+reduction / all-reduction -- over a simulated fully-connected,
+one-ported, bidirectional network and checks that each collective
+completes in exactly its optimal round count (n-1+q for broadcast /
+all-broadcast / reduction, 2(n-1)+2q for the composed all-reduction).
+This is the end-to-end functional oracle for the schedule constructions
+(and doubles as a latency/volume counter for the benchmark cost models).
 """
 
 from __future__ import annotations
@@ -12,10 +15,28 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 from .engine import get_bundle
 from .schedule import num_rounds
 
-__all__ = ["simulate_broadcast", "simulate_allgather", "SimResult"]
+__all__ = [
+    "simulate_broadcast",
+    "simulate_allgather",
+    "simulate_allbroadcast",
+    "simulate_reduce",
+    "simulate_allreduce",
+    "SimResult",
+]
+
+# Reduction operators: name -> (binary combine on numpy values).  Both are
+# associative and commutative; the reversal delivers every contribution
+# exactly once, so '+' is bit-exact and 'max' trivially so.
+_OPS = {
+    "+": np.add,
+    "sum": np.add,
+    "max": np.maximum,
+}
 
 
 @dataclass
@@ -27,18 +48,28 @@ class SimResult:
     buffers: Optional[list] = None   # final per-processor buffers
 
 
-def simulate_broadcast(p: int, n: int, root: int = 0, keep_buffers: bool = False) -> SimResult:
+def simulate_broadcast(
+    p: int,
+    n: int,
+    root: int = 0,
+    keep_buffers: bool = False,
+    payloads: Optional[List] = None,
+) -> SimResult:
     """Algorithm 1: broadcast n blocks from ``root`` to all p processors.
 
     Simulates all rounds; asserts the final state is complete.  Block
-    payloads are (block_index,) tuples so content errors are caught, not
-    just counts.  The rooted engine bundle indexes schedules by real
-    rank (rank renumbering of paper §2.1 folded in by the engine).
+    payloads default to the block index (so content errors are caught,
+    not just counts); ``payloads`` substitutes real per-block values
+    (e.g. the all-reduction return path), delivered and checked
+    verbatim.  The rooted engine bundle indexes schedules by real rank
+    (rank renumbering of paper §2.1 folded in by the engine).
     """
+    pay = list(payloads) if payloads is not None else list(range(n))
+    assert len(pay) == n
     # buffer[r][j] holds the payload of block j at processor r (or None).
     buf: List[List[Optional[int]]] = [[None] * n for _ in range(p)]
     for j in range(n):
-        buf[root][j] = j
+        buf[root][j] = pay[j]
 
     res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n))
     if p == 1:
@@ -80,7 +111,7 @@ def simulate_broadcast(p: int, n: int, root: int = 0, keep_buffers: bool = False
                 f"p={p} n={n} round={i}: rank {dst} expected block {rblk_eff}, "
                 f"got {blk}"
             )
-            assert payload == blk, "payload corrupted"
+            assert np.array_equal(payload, pay[blk]), "payload corrupted"
             buf[dst][blk] = payload
             res.messages += 1
             res.blocks_moved += 1
@@ -91,7 +122,9 @@ def simulate_broadcast(p: int, n: int, root: int = 0, keep_buffers: bool = False
 
     for r in range(p):
         for j in range(n):
-            assert buf[r][j] == j, f"p={p} n={n}: rank {r} missing block {j}"
+            assert buf[r][j] is not None and np.array_equal(buf[r][j], pay[j]), (
+                f"p={p} n={n}: rank {r} missing block {j}"
+            )
     assert res.rounds == res.optimal_rounds
     res.buffers = buf if keep_buffers else None
     return res
@@ -187,4 +220,161 @@ def simulate_allgather(
                 )
     assert res.rounds == res.optimal_rounds
     res.buffers = buf if keep_buffers else None
+    return res
+
+
+def simulate_allbroadcast(
+    p: int,
+    n: int,
+    sizes: Optional[List[int]] = None,
+    keep_buffers: bool = False,
+) -> SimResult:
+    """All-broadcast (the paper's name for all-to-all broadcast).
+
+    Every processor broadcasts its n blocks to every other processor in
+    the same n-1+q rounds; identical to :func:`simulate_allgather`, kept
+    under the collective-family name of arXiv:2407.18004.
+    """
+    return simulate_allgather(p, n, sizes=sizes, keep_buffers=keep_buffers)
+
+
+# --------------------------------------------------- reversed schedules
+
+
+def simulate_reduce(
+    p: int,
+    n: int,
+    root: int = 0,
+    op: str = "+",
+    values: Optional[np.ndarray] = None,
+    keep_buffers: bool = True,
+) -> SimResult:
+    """Reduction of n blocks to ``root`` by time-reversing Algorithm 1.
+
+    Every processor contributes ``values[r]`` (shape [p, n]; a seeded
+    random int array when omitted).  Reduction round t replays forward
+    round R-1-t with edges flipped: rank r forwards the partial of the
+    block it forward-*received* in that round to its forward
+    from-neighbor (r - skip[k]) % p, drains it, and accumulates the
+    incoming partial into the block it forward-*sent*.  After exactly
+    R = n-1+q rounds the root holds the op-reduction of every block and
+    every other rank is fully drained -- both asserted, along with
+    exactly-once accumulation of every (origin rank, block) contribution.
+
+    ``res.buffers[r][j]`` is rank r's final partial of block j (the
+    op-identity is represented as None; ``buffers[root]`` is the result).
+    """
+    opf = _OPS[op]
+    if values is None:
+        values = np.arange(p * n, dtype=np.int64).reshape(p, n) ** 2 % 1013
+    values = np.asarray(values)
+    assert values.shape[0] == p and values.shape[1] == n
+
+    # Partial state: vals[r][j] (None == op identity / drained) and the
+    # multiset-of-origins certificate contrib[r][j].
+    vals: List[List[Optional[np.ndarray]]] = [
+        [values[r][j] for j in range(n)] for r in range(p)
+    ]
+    contrib: List[List[set]] = [[{r} for _ in range(n)] for r in range(p)]
+
+    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n))
+    if p == 1:
+        res.buffers = vals if keep_buffers else None
+        return res
+
+    bundle = get_bundle(p, root)
+    skip = bundle.skips
+    fwd_blocks, acc_blocks, ks = bundle.reversed_per_round_tables(n)
+
+    for t in range(fwd_blocks.shape[0]):
+        k = int(ks[t])
+        # Pack phase: capture every forwarded partial before any drain
+        # (synchronous round model; a rank may forward and accumulate the
+        # same clamped block in one round -- capture-drain-accumulate).
+        msgs: List[Tuple[int, int, int, Optional[np.ndarray], set]] = []
+        for r in range(p):
+            e = int(fwd_blocks[t, r])
+            # Idle entry, or the root: forward rounds never send TO the
+            # root (it has everything), so the reversal never sends FROM
+            # it (phase offsets can lift its negative entries >= 0 in
+            # final-phase capped rounds -- those forward edges were the
+            # suppressed redundant re-sends to the root).
+            if e < 0 or r == root:
+                continue
+            blk = min(e, n - 1)
+            dst = (r - skip[k]) % p
+            msgs.append((r, dst, blk, vals[r][blk], contrib[r][blk]))
+            res.messages += 1
+            res.blocks_moved += 1
+        # Drain phase: a forwarded partial leaves its sender.
+        for r, _, blk, _, _ in msgs:
+            vals[r][blk] = None
+            contrib[r][blk] = set()
+        # Accumulate phase.
+        for r, dst, blk, v, c in msgs:
+            e = int(acc_blocks[t, dst])
+            assert e >= 0 and min(e, n - 1) == blk, (
+                f"p={p} n={n} round={t}: rank {dst} expected block "
+                f"{e}, got {blk} from {r}"
+            )
+            if not c:
+                continue  # an already-drained (identity) partial
+            assert contrib[dst][blk].isdisjoint(c), (
+                f"p={p} n={n} round={t}: duplicate contribution "
+                f"{contrib[dst][blk] & c} for block {blk} at rank {dst}"
+            )
+            contrib[dst][blk] |= c
+            vals[dst][blk] = v if vals[dst][blk] is None else opf(vals[dst][blk], v)
+        res.rounds += 1
+
+    everyone = set(range(p))
+    for j in range(n):
+        assert contrib[root][j] == everyone, (
+            f"p={p} n={n}: root {root} missing contributions "
+            f"{everyone - contrib[root][j]} for block {j}"
+        )
+    for r in range(p):
+        if r == root:
+            continue
+        for j in range(n):
+            assert not contrib[r][j], (
+                f"p={p} n={n}: rank {r} kept a partial of block {j}"
+            )
+    assert res.rounds == res.optimal_rounds
+    res.buffers = vals if keep_buffers else None
+    return res
+
+
+def simulate_allreduce(
+    p: int,
+    n: int,
+    root: int = 0,
+    op: str = "+",
+    values: Optional[np.ndarray] = None,
+    keep_buffers: bool = True,
+) -> SimResult:
+    """All-reduction: reduce to ``root`` then broadcast the result back.
+
+    The reversed reduction (n-1+q rounds) composes with the forward
+    broadcast (n-1+q rounds) on the same cached bundle, for a total of
+    exactly 2(n-1) + 2*ceil(log2 p) rounds.  The return path runs the
+    payload-checked Algorithm-1 simulation carrying the reduced blocks,
+    so every rank provably ends with the op-reduction of every block.
+    """
+    red = simulate_reduce(p, n, root=root, op=op, values=values, keep_buffers=True)
+    res = SimResult(
+        rounds=red.rounds,
+        optimal_rounds=2 * num_rounds(p, n),
+        messages=red.messages,
+        blocks_moved=red.blocks_moved,
+    )
+    reduced = red.buffers[root]
+    bcast = simulate_broadcast(
+        p, n, root=root, keep_buffers=keep_buffers, payloads=reduced
+    )
+    res.rounds += bcast.rounds
+    res.messages += bcast.messages
+    res.blocks_moved += bcast.blocks_moved
+    assert res.rounds == res.optimal_rounds
+    res.buffers = bcast.buffers
     return res

@@ -8,6 +8,8 @@ import tempfile
 
 import pytest
 
+pytestmark = pytest.mark.multidevice
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -1,0 +1,147 @@
+"""Property-based schedule conformance suite for the whole collective family.
+
+Systematic replacement for spot checks: for sampled p in [1, 512] (plus a
+deterministic edge list) and ALL ranks, assert
+
+  * Correctness Conditions 3 & 4 (paper §2.1), forward AND reversed
+    (the reduction reading of arXiv:2407.18004),
+  * the send-table gather identity send[r][k] == recv[(r + skip[k]) % p][k]
+    (Proposition 4 / Condition 2),
+  * the permutation property of each round: round k's communication is
+    the rotation r -> (r + skip[k]) % p, a perfect matching (every rank
+    sends exactly one and receives exactly one message),
+  * engine-vs-reference legacy equivalence: the O(log p) engine tables
+    match the O(log^2 p)/O(log^3 p) legacy constructions bit-for-bit,
+  * rooted bundles are exactly the row rotation of the root-0 tables and
+    reversed tables are aliases of the forward ones (one cache entry
+    serves the family -- no second table build).
+
+Runs through tests/_hypothesis_compat.py, so it works with or without
+hypothesis installed (the fallback runs a deterministic sample).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.engine import get_bundle
+from repro.core.reference import (
+    recv_schedule_legacy,
+    send_schedule_from_recv,
+    send_schedule_legacy,
+)
+from repro.core.schedule import baseblock, ceil_log2
+from repro.core.verify import (
+    check_condition_3,
+    check_condition_4,
+    check_reversed_condition_3,
+    check_reversed_condition_4,
+)
+
+# Boundary-heavy deterministic coverage: powers of two +-1, the paper's
+# p=11/16/17/36 worked examples, and the sampling range endpoints.
+EDGE_PS = [1, 2, 3, 4, 5, 7, 8, 11, 16, 17, 31, 32, 33, 36, 63, 64,
+           127, 128, 129, 255, 256, 257, 511, 512]
+
+# Full legacy (O(log^3 p)) cross-check for every rank is quadratic-ish in
+# practice; above this p a deterministic stride subset of ranks is used.
+LEGACY_FULL_P = 128
+LEGACY_SAMPLE_RANKS = 64
+
+
+def assert_family_conformance(p: int) -> None:
+    """All per-rank schedule properties for one axis size p."""
+    bundle = get_bundle(p)
+    q, skip = bundle.q, bundle.skips
+    recv, send = bundle.recv, bundle.send
+
+    assert recv.shape == send.shape == (p, q)
+
+    # --- Conditions 3 & 4, forward and reversed, for every rank.
+    for r in range(p):
+        b = baseblock(r, skip, q)
+        assert check_condition_3(bundle.recv_row(r), b, q), (p, r)
+        assert check_reversed_condition_3(bundle.rev_send_row(r), b, q), (p, r)
+        if r == 0:
+            assert bundle.send_row(0) == list(range(q))
+            assert bundle.rev_recv_row(0) == list(range(q))
+        else:
+            assert check_condition_4(
+                bundle.recv_row(r), bundle.send_row(r), b, q
+            ), (p, r)
+            assert check_reversed_condition_4(
+                bundle.rev_recv_row(r), bundle.rev_send_row(r), b, q
+            ), (p, r)
+
+    # --- Send-table gather identity (Prop. 4), vectorized over all ranks.
+    if q:
+        ranks = np.arange(p)[:, None]
+        to = (ranks + np.asarray(skip[:q])[None, :]) % p
+        assert np.array_equal(send, np.take_along_axis(recv, to, axis=0)), p
+
+    # --- Permutation property of each round: the rotation by skip[k] is a
+    # bijection on ranks, and in/out neighbor tables are mutually inverse.
+    for k in range(q):
+        out_k = bundle.neighbors_out[:, k]
+        in_k = bundle.neighbors_in[:, k]
+        assert np.array_equal(np.sort(out_k), np.arange(p)), (p, k)
+        assert np.array_equal(np.sort(in_k), np.arange(p)), (p, k)
+        assert np.array_equal(in_k[out_k], np.arange(p)), (p, k)
+        # Reversed rounds use the same matching with directions flipped.
+        assert np.array_equal(bundle.rev_neighbors_out[:, k], in_k), (p, k)
+
+    # --- Engine vs legacy reference constructions, bit-for-bit.
+    if p <= LEGACY_FULL_P:
+        legacy_ranks = range(p)
+    else:
+        legacy_ranks = sorted(
+            {0, 1, p - 1, *range(0, p, max(1, p // LEGACY_SAMPLE_RANKS))}
+        )
+    for r in legacy_ranks:
+        assert bundle.recv_row(r) == recv_schedule_legacy(p, r, skip), (p, r)
+        assert bundle.send_row(r) == send_schedule_from_recv(p, r, skip), (p, r)
+        assert bundle.send_row(r) == send_schedule_legacy(p, r, skip), (p, r)
+
+    # --- One cache entry serves the family: reversed tables are views of
+    # the forward arrays (no second O(p log p) build), and rooted bundles
+    # are row rotations of the root-0 tables.
+    assert bundle.rev_recv is bundle.send and bundle.rev_send is bundle.recv
+    for root in sorted({0, 1 % p, p - 1}):
+        rooted = get_bundle(p, root)
+        virt = (np.arange(p) - root) % p
+        assert np.array_equal(rooted.recv, recv[virt]), (p, root)
+        assert np.array_equal(rooted.send, send[virt]), (p, root)
+        assert rooted.rev_recv is rooted.send and rooted.rev_send is rooted.recv
+
+
+@pytest.mark.parametrize("p", EDGE_PS)
+def test_family_conformance_edge_p(p):
+    assert_family_conformance(p)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=512))
+def test_family_conformance_sampled_p(p):
+    assert_family_conformance(p)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=512), st.integers(min_value=1, max_value=9))
+def test_reversed_per_round_tables_match_plan(p, n):
+    """The vectorized per-round reversed tables equal the per-entry
+    composition of reversed_round_plan with the swapped base tables."""
+    bundle = get_bundle(p)
+    fwd, acc, ks = bundle.reversed_per_round_tables(n)
+    plan = bundle.reversed_round_plan(n)
+    assert plan == list(reversed(bundle.round_plan(n)))
+    assert fwd.shape == acc.shape == (len(plan), p)
+    for t, (k, off) in enumerate(plan):
+        assert ks[t] == k
+        for r in range(p):
+            assert fwd[t, r] == int(bundle.rev_send[r][k]) + off
+            assert acc[t, r] == int(bundle.rev_recv[r][k]) + off
+        # Reversed Condition 2 per effective entry: what r forwards is
+        # exactly what its reversed to-processor accumulates.
+        for r in range(p):
+            f = (r - bundle.skips[k]) % p
+            assert fwd[t, r] == acc[t, f]

@@ -1,10 +1,27 @@
-"""End-to-end simulation tests for Algorithm 1 (broadcast) and Algorithm 2
-(all-to-all broadcast): payload-checked delivery in exactly n-1+q rounds."""
+"""End-to-end simulation tests for the collective family: broadcast /
+all-broadcast (forward schedules) and reduction / all-reduction (reversed
+schedules), payload-checked delivery in exactly the optimal round counts."""
 
+import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.simulator import simulate_allgather, simulate_broadcast
+from repro.core.schedule import ceil_log2, num_rounds
+from repro.core.simulator import (
+    simulate_allbroadcast,
+    simulate_allgather,
+    simulate_allreduce,
+    simulate_broadcast,
+    simulate_reduce,
+)
+
+# The reversed-family acceptance grid: every (p, n, root) combination.
+FAMILY_PS = [1, 2, 3, 5, 8, 11, 36, 64]
+FAMILY_NS = [1, 2, 4, 7]
+
+
+def _roots(p):
+    return sorted({0, 1 % p, p - 1})
 
 
 @pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 7, 8, 16, 17, 31, 33, 100])
@@ -45,3 +62,81 @@ def test_broadcast_volume_is_optimal():
     for p, n in [(8, 4), (17, 5), (33, 3)]:
         res = simulate_broadcast(p, n)
         assert res.blocks_moved == (p - 1) * n
+
+
+# ------------------------------------------- reversed-schedule family
+
+
+@pytest.mark.parametrize("p", FAMILY_PS)
+@pytest.mark.parametrize("n", FAMILY_NS)
+def test_reduce_round_optimal_and_bitexact(p, n):
+    """Reduction completes in exactly n-1+q rounds for every root and the
+    result matches the NumPy reference reduction bit-exactly."""
+    rng = np.random.default_rng(p * 100 + n)
+    for root in _roots(p):
+        vals = rng.integers(-(1 << 31), 1 << 31, size=(p, n)).astype(np.int64)
+        res = simulate_reduce(p, n, root=root, values=vals)
+        assert res.rounds == res.optimal_rounds == num_rounds(p, n)
+        got = np.array([res.buffers[root][j] for j in range(n)])
+        assert np.array_equal(got, vals.sum(axis=0))
+
+        fvals = rng.normal(size=(p, n))
+        resm = simulate_reduce(p, n, root=root, op="max", values=fvals)
+        assert resm.rounds == resm.optimal_rounds == num_rounds(p, n)
+        gotm = np.array([resm.buffers[root][j] for j in range(n)])
+        assert np.array_equal(gotm, fvals.max(axis=0))
+
+
+@pytest.mark.parametrize("p", FAMILY_PS)
+@pytest.mark.parametrize("n", FAMILY_NS)
+def test_allreduce_round_optimal_and_bitexact(p, n):
+    """All-reduction completes in exactly 2(n-1)+2*ceil(log2 p) rounds for
+    every root and delivers the bit-exact reduction to EVERY rank."""
+    rng = np.random.default_rng(p * 1000 + n)
+    for root in _roots(p):
+        vals = rng.integers(-(1 << 31), 1 << 31, size=(p, n)).astype(np.int64)
+        res = simulate_allreduce(p, n, root=root, values=vals)
+        predicted = 0 if p == 1 else 2 * (n - 1) + 2 * ceil_log2(p)
+        assert res.rounds == res.optimal_rounds == predicted
+        expect = vals.sum(axis=0)
+        for r in range(p):
+            got = np.array([res.buffers[r][j] for j in range(n)])
+            assert np.array_equal(got, expect), (p, n, root, r)
+
+        fvals = rng.normal(size=(p, n))
+        resm = simulate_allreduce(p, n, root=root, op="max", values=fvals)
+        assert resm.rounds == resm.optimal_rounds == predicted
+        expectm = fvals.max(axis=0)
+        for r in range(p):
+            gotm = np.array([resm.buffers[r][j] for j in range(n)])
+            assert np.array_equal(gotm, expectm), (p, n, root, r)
+
+
+@pytest.mark.parametrize("p", FAMILY_PS)
+@pytest.mark.parametrize("n", FAMILY_NS)
+def test_allbroadcast_round_optimal(p, n):
+    res = simulate_allbroadcast(p, n)
+    assert res.rounds == res.optimal_rounds == num_rounds(p, n)
+
+
+def test_reduce_volume_matches_broadcast():
+    # Time reversal preserves the edge multiset: the reduction moves real
+    # partials over the same count of edges or fewer (idle capped rounds
+    # forward identity-only partials, which still count as a block move).
+    for p, n in [(8, 4), (17, 5), (33, 3)]:
+        fwd = simulate_broadcast(p, n)
+        rev = simulate_reduce(p, n)
+        assert rev.rounds == fwd.rounds
+        assert rev.blocks_moved >= (p - 1) * n
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=1, max_value=100), st.integers(min_value=1, max_value=13))
+def test_reduce_hypothesis(p, n):
+    simulate_reduce(p, n)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=1, max_value=40), st.integers(min_value=1, max_value=8))
+def test_allreduce_hypothesis(p, n):
+    simulate_allreduce(p, n)
