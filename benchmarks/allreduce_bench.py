@@ -99,6 +99,15 @@ for m in (1024, 65536, 1048576):
     return rows
 
 
+def roundstep_main(p: int = 8, n: int = 8):
+    """jnp-vs-pallas timing of one fused reduce round step (the
+    accumulate+capture/drain, op="sum"); shared sweep in
+    ``roundstep_common``."""
+    from benchmarks.roundstep_common import roundstep_main as rs_main
+
+    rs_main("allreduce", p=p, n=n)
+
+
 def main():
     print("name,m_bytes,n_opt,rounds,circulant_us,ring_us,recdoub_us,binomial_us")
     for r in model_rows():

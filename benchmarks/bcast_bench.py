@@ -92,6 +92,14 @@ for m in (1024, 65536, 1048576):
     return rows
 
 
+def roundstep_main(p: int = 8, n: int = 8):
+    """jnp-vs-pallas timing of one fused broadcast round step (the
+    unpack+pack shuffle); shared sweep in ``roundstep_common``."""
+    from benchmarks.roundstep_common import roundstep_main as rs_main
+
+    rs_main("bcast", p=p, n=n)
+
+
 def main():
     print("name,m_bytes,n_opt,rounds,circulant_us,binomial_us,scatter_ag_us,"
           "pipeline_us")

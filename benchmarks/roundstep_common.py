@@ -1,0 +1,62 @@
+"""Shared jnp-vs-pallas round-step timing sweep for the collective benches.
+
+One timing methodology and CSV schema for both families, so the
+broadcast (fused unpack+pack ``shuffle``) and all-reduce (fused
+accumulate+capture/drain ``acc_shuffle``) sweeps cannot drift apart.
+On CPU the pallas backend runs in interpret mode -- the comparison is
+apples-to-apples only on TPU, but the sweep certifies the plumbing and
+reports the interpret overhead honestly in its ``mode`` column.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def roundstep_rows(family: str, p: int = 8, n: int = 8,
+                   sizes=(1 << 10, 1 << 16, 1 << 20), iters: int = 50):
+    """Time one steady-state fused round step per backend and size.
+
+    ``family``: ``"bcast"`` (shuffle over an [p, n+1, bs] buffer) or
+    ``"allreduce"`` (acc_shuffle with op="sum" over [p, n+2, bs]).
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.roundstep import get_round_step
+
+    nslots = n + 1 if family == "bcast" else n + 2
+    rng = np.random.default_rng(0 if family == "bcast" else 1)
+    rows = []
+    for m in sizes:
+        bs = max(1, m // (4 * n))
+        buf = jnp.asarray(rng.normal(size=(p, nslots, bs)), jnp.float32)
+        msg = jnp.asarray(rng.normal(size=(p, bs)), jnp.float32)
+        ia = jnp.asarray(rng.integers(0, n + 1, size=p), jnp.int32)
+        ib = jnp.asarray(rng.integers(0, n + 1, size=p), jnp.int32)
+        for backend in ("jnp", "pallas"):
+            step = get_round_step(backend)
+            if family == "bcast":
+                f = jax.jit(step.shuffle)
+            else:
+                f = jax.jit(lambda b, g, a, w: step.acc_shuffle(b, g, a, w,
+                                                                op="sum"))
+            jax.block_until_ready(f(buf, msg, ia, ib))  # compile
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(f(buf, msg, ia, ib))
+            us = (time.perf_counter() - t0) / iters * 1e6
+            rows.append({"backend": backend, "m": m, "n": n, "us": us,
+                         "mode": ("interpret"
+                                  if getattr(step, "interpret", False)
+                                  else "compiled" if backend == "pallas"
+                                  else "xla")})
+    return rows
+
+
+def roundstep_main(family: str, p: int = 8, n: int = 8):
+    print("name,backend,mode,m_bytes,n_blocks,us_per_round_step")
+    for r in roundstep_rows(family, p=p, n=n):
+        print(f"{family}_roundstep,{r['backend']},{r['mode']},{r['m']},"
+              f"{r['n']},{r['us']:.1f}")

@@ -46,6 +46,13 @@ def main() -> None:
 
         allreduce_bench.main()
 
+    if which in ("roundstep", "all"):
+        print("# === Round-step data plane: jnp vs pallas backends ===")
+        from benchmarks import allreduce_bench, bcast_bench
+
+        bcast_bench.roundstep_main()
+        allreduce_bench.roundstep_main()
+
     if which in ("verify", "all"):
         print("# === Correctness sweep (paper section 3 verification) ===")
         from repro.core.verify import verify_p

@@ -2,15 +2,18 @@
 plus the reversed-schedule collective family (reduction / all-reduction /
 all-broadcast, arXiv:2407.18004) on the same cached engine.
 
-Public API:
+Public API (see docs/api.md for the full reference):
     get_bundle, ScheduleBundle (the cached schedule engine -- preferred)
+    RoundStep, get_round_step (the pluggable per-round data plane)
     compute_skips, baseblock, recv_schedule, send_schedule, schedule_tables
     verify_schedules, verify_reversed_schedules, verify_bundle
     simulate_broadcast, simulate_allgather, simulate_allbroadcast,
-    simulate_reduce, simulate_allreduce
+    simulate_reduce, simulate_allreduce (all take backend="jnp"|"pallas"
+    to certify the round-step data plane bit-exactly)
 """
 
 from .engine import ScheduleBundle, get_bundle
+from .roundstep import RoundStep, get_round_step
 from .schedule import (
     baseblock,
     ceil_log2,
@@ -39,6 +42,8 @@ from .verify import (
 __all__ = [
     "ScheduleBundle",
     "get_bundle",
+    "RoundStep",
+    "get_round_step",
     "verify_bundle",
     "baseblock",
     "ceil_log2",

@@ -27,6 +27,15 @@ Correctness Condition 1 the sender's block index is negative exactly when
 the receiver's is, so both sides address the garbage slot in the same
 round and no masking is needed.  Indices > n-1 are capped to n-1 (final
 phase), exactly as in the paper.
+
+Data plane: the per-round pack/exchange/unpack-or-accumulate step runs
+through the pluggable :class:`repro.core.roundstep.RoundStep` backend --
+``backend="jnp"`` (default, pure-jnp gathers/scatters, lowers anywhere)
+or ``backend="pallas"`` (fused scalar-prefetch kernels, the TPU fast
+path; interpret-mode on CPU).  Slot selection is precomputed host-side
+from the engine's per-round tables, so the traced per-round work is one
+``ppermute`` plus one backend call.  Both backends are bit-exact against
+each other and against the simulator reference (see docs/kernels.md).
 """
 
 from __future__ import annotations
@@ -46,6 +55,11 @@ from .costmodel import (
 )
 from .engine import ScheduleBundle, get_bundle
 from .jaxcompat import shard_map as _shard_map
+from .roundstep import (
+    broadcast_slot_plan,
+    get_round_step,
+    reduce_slot_plan,
+)
 
 __all__ = [
     "circulant_broadcast",
@@ -100,6 +114,7 @@ def circulant_broadcast(
     *,
     n_blocks: Optional[int] = None,
     root: int = 0,
+    backend: str = "jnp",
     model: CommModel = CommModel(),
 ):
     """Round-optimal n-block broadcast of ``x[root]`` along a mesh axis.
@@ -107,7 +122,14 @@ def circulant_broadcast(
     ``x`` has a leading axis of size p sharded over ``axis_name`` (each
     rank owns one slice; only the root's slice content matters).  Returns
     an array of the same spec where every slice equals ``x[root]``.
-    Runs in n-1+ceil(log2 p) ppermute rounds (Algorithm 1).
+    Runs in n-1+ceil(log2 p) ppermute rounds (Algorithm 1) -- the
+    paper's lower bound for n-block broadcast in the one-ported
+    bidirectional model, so the round count is optimal.
+
+    ``backend`` selects the per-round data plane ("jnp" or "pallas"),
+    see :mod:`repro.core.roundstep`; per-round buffer slots are
+    precomputed host-side from the engine's per-round tables, so every
+    traced round is one ppermute plus one fused round-step call.
     """
     p = mesh.shape[axis_name]
     if p == 1:
@@ -121,25 +143,29 @@ def circulant_broadcast(
     elems = int(np.prod(x.shape[1:]))
     n = n_blocks or max(1, optimal_num_blocks_bcast(p, elems * x.dtype.itemsize, model))
     n = min(n, max(1, elems))
-    recv_t, send_t = bundle.jnp_tables()
-    rounds = bundle.round_plan(n)
+    recv_slots, send_slots, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
 
     def body(xs):
         r = jax.lax.axis_index(axis_name)
         flat = xs.reshape(-1)
         buf, bs, pad = _split_blocks(flat, n)
-        buf = jnp.where(r == root, buf, jnp.zeros_like(buf))
-        my_recv = recv_t[r]  # [q]
-        my_send = send_t[r]
-        for (k, off) in rounds:
-            sb = my_send[k] + off
-            rb = my_recv[k] + off
-            send_slot = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
-            recv_slot = jnp.where(rb < 0, n, jnp.minimum(rb, n - 1))
-            out_blk = jax.lax.dynamic_slice_in_dim(buf, send_slot, 1, axis=0)
-            got = jax.lax.ppermute(out_blk, axis_name, _rot_perm(p, bundle.skip[k]))
-            buf = jax.lax.dynamic_update_slice_in_dim(buf, got, recv_slot, axis=0)
-        out = buf[:n].reshape(-1)[: flat.shape[0]]
+        buf = jnp.where(r == root, buf, jnp.zeros_like(buf))[None]  # [1, n+1, bs]
+        recv_t = jnp.asarray(recv_slots)  # [R, p] static slot tables
+        send_t = jnp.asarray(send_slots)
+        msg = step.pack(buf, send_t[0, r][None])
+        for t in range(R):
+            got = jax.lax.ppermute(
+                msg, axis_name, _rot_perm(p, bundle.skip[int(ks[t])])
+            )
+            if t + 1 < R:
+                buf, msg = step.shuffle(
+                    buf, got, recv_t[t, r][None], send_t[t + 1, r][None]
+                )
+            else:
+                buf = step.unpack(buf, got, recv_t[t, r][None])
+        out = buf[0, :n].reshape(-1)[: flat.shape[0]]
         return out.reshape(xs.shape)
 
     shard = _shard_map(
@@ -147,6 +173,8 @@ def circulant_broadcast(
         mesh=mesh,
         in_specs=P(axis_name),
         out_specs=P(axis_name),
+        # jax has no replication rule for pallas_call inside shard_map.
+        check_vma=(backend == "jnp"),
     )
     return shard(x)
 
@@ -160,15 +188,19 @@ def circulant_allgather(
     x: jax.Array,
     *,
     n_blocks: Optional[int] = None,
+    backend: str = "jnp",
     model: CommModel = CommModel(),
 ):
     """All-to-all broadcast (regular allgather) along a mesh axis.
 
     ``x``: global array sharded on its leading dim over ``axis_name``.
     Returns the fully replicated gathered array (same global shape,
-    spec ()).  This is Algorithm 2 with equal-size contributions; the
-    per-round message packs one block per root (p-1 useful + 1 garbage
-    row kept for a uniform [p, B] layout).
+    spec ()) in the optimal n-1+ceil(log2 p) rounds.  This is
+    Algorithm 2 with equal-size contributions; the per-round message
+    packs one block per root (p-1 useful + 1 garbage row kept for a
+    uniform [p, B] layout).  ``backend`` selects the per-round data
+    plane as in :func:`circulant_broadcast` -- here the p root rows map
+    onto the batched round-step kernel rows directly.
     """
     p = mesh.shape[axis_name]
     if p == 1:
@@ -180,8 +212,12 @@ def circulant_allgather(
     nbytes = shard_elems * x.dtype.itemsize * p
     n = n_blocks or max(1, optimal_num_blocks_allgather(p, nbytes, model))
     n = min(n, max(1, shard_elems))
-    recv_t = jnp.asarray(bundle.recv)  # [p, q]
-    rounds = bundle.round_plan(n)
+    # One clamped [R, p] slot table serves recv AND send: by Condition 2
+    # the send slot of root row j is the recv slot of the shifted
+    # virtual rank, so both are gathers of the same table.
+    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
     jidx = jnp.arange(p)
 
     def body(xs):
@@ -192,27 +228,21 @@ def circulant_allgather(
         # buffers[j]: blocks of root j; own row filled, others zero.
         buf = jnp.zeros((p, n + 1, bs), xs.dtype)
         buf = jax.lax.dynamic_update_slice(buf, own[None], (r, 0, 0))
-        for (k, off) in rounds:
-            sk = bundle.skip[k]
-            # recvblocks_r[j][k] = recv[(r - j) % p][k]
-            rb = recv_t[(r - jidx) % p, k] + off
-            # sendblocks_r[j][k] = recv[(r - j + skip[k]) % p][k]
-            sb = recv_t[(r - jidx + sk) % p, k] + off
-            send_slot = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
-            recv_slot = jnp.where(rb < 0, n, jnp.minimum(rb, n - 1))
-            msg = jnp.take_along_axis(buf, send_slot[:, None, None], axis=1)
-            got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, sk))
-            buf = jax.lax.scatter(
-                buf,
-                jnp.stack([jidx, recv_slot], axis=-1),
-                got[:, 0, :],
-                jax.lax.ScatterDimensionNumbers(
-                    update_window_dims=(1,),
-                    inserted_window_dims=(0, 1),
-                    scatter_dims_to_operand_dims=(0, 1),
-                ),
-                mode="promise_in_bounds",
+        S = jnp.asarray(recv_slots)  # [R, p] static slot table
+        base = (r - jidx) % p        # virtual rank of root row j at rank r
+
+        def send_slots_at(t):
+            return S[t][(base + bundle.skip[int(ks[t])]) % p]
+
+        msg = step.pack(buf, send_slots_at(0))
+        for t in range(R):
+            got = jax.lax.ppermute(
+                msg, axis_name, _rot_perm(p, bundle.skip[int(ks[t])])
             )
+            if t + 1 < R:
+                buf, msg = step.shuffle(buf, got, S[t][base], send_slots_at(t + 1))
+            else:
+                buf = step.unpack(buf, got, S[t][base])
         out = buf[:, :n, :].reshape(p, -1)[:, : flat.shape[0]]
         return out.reshape((x.shape[0],) + x.shape[1:])
 
@@ -233,6 +263,7 @@ def circulant_allgatherv(
     sizes: Sequence[int],
     *,
     n_blocks: Optional[int] = None,
+    backend: str = "jnp",
     model: CommModel = CommModel(),
 ):
     """Irregular allgather (MPI_Allgatherv analogue), Algorithm 2 proper.
@@ -244,6 +275,13 @@ def circulant_allgatherv(
     root, so the wire volume tracks sum(sizes), not p*max(sizes) --
     this is what makes the degenerate case fast (paper Figure 2).
     Returns the replicated [p, cap] array with row j = rank j's data.
+
+    Block sizes are ragged per root, so the data plane uses the
+    round-step ``pack``/``unpack`` primitives per root row (the fused
+    shuffle needs a uniform message layout).  With ``backend="pallas"``
+    that means 2p single-row kernel launches per round -- correct and
+    tested, but launch overhead dominates the tiny copies, so prefer
+    the default ``"jnp"`` backend for ragged sizes.
     """
     p = mesh.shape[axis_name]
     sizes = [int(s) for s in sizes]
@@ -257,8 +295,9 @@ def circulant_allgatherv(
     )
     n = min(n, max(1, min([s for s in sizes if s > 0], default=1)))
     bs_j = [max(1, -(-sizes[j] // n)) for j in range(p)]  # per-root block size
-    recv_t = jnp.asarray(bundle.recv)
-    rounds = bundle.round_plan(n)
+    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
     cap = x.shape[-1]
 
     def body(xs):
@@ -273,25 +312,22 @@ def circulant_allgatherv(
                 [pj[: n * bs_j[j]].reshape(n, bs_j[j]),
                  jnp.zeros((1, bs_j[j]), xs.dtype)], axis=0)
             bufs.append(jnp.where(r == j, own, jnp.zeros_like(own)))
-        for (k, off) in rounds:
-            sk = bundle.skip[k]
+        S = jnp.asarray(recv_slots)  # [R, p] static slot table
+        for t in range(R):
+            sk = bundle.skip[int(ks[t])]
             parts = []
             slots_r = []
             for j in range(p):
-                sb = recv_t[(r - j + sk) % p, k] + off
-                rb = recv_t[(r - j) % p, k] + off
-                ss = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
-                rs = jnp.where(rb < 0, n, jnp.minimum(rb, n - 1))
-                parts.append(jax.lax.dynamic_slice_in_dim(bufs[j], ss, 1, 0)[0])
+                ss = S[t][(r - j + sk) % p]
+                rs = S[t][(r - j) % p]
+                parts.append(step.pack(bufs[j][None], ss[None])[0])
                 slots_r.append(rs)
             msg = jnp.concatenate(parts)  # [sum bs_j]
             got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, sk))
             o = 0
             for j in range(p):
                 piece = got[o : o + bs_j[j]][None]
-                bufs[j] = jax.lax.dynamic_update_slice_in_dim(
-                    bufs[j], piece, slots_r[j], 0
-                )
+                bufs[j] = step.unpack(bufs[j][None], piece, slots_r[j][None])[0]
                 o += bs_j[j]
         rows = []
         for j in range(p):
@@ -314,6 +350,7 @@ def circulant_reduce_scatter(
     x: jax.Array,
     *,
     n_blocks: Optional[int] = None,
+    backend: str = "jnp",
     model: CommModel = CommModel(),
 ):
     """BEYOND-PAPER: round-optimal reduce-scatter by *time reversal* of the
@@ -343,8 +380,13 @@ def circulant_reduce_scatter(
         1, optimal_num_blocks_allgather(p, L * x.dtype.itemsize, model)
     )
     n = min(n, max(1, shard))
-    recv_t = jnp.asarray(bundle.recv)
-    rounds = bundle.round_plan(n)
+    # Clamped reversed per-round tables (same single recv-derived table
+    # for forward-capture and accumulate slots -- Condition 2 again).
+    fwd_eff, acc_eff, ks = bundle.reversed_per_round_tables(n)
+    fwd_slots = np.where(fwd_eff < 0, n, np.minimum(fwd_eff, n - 1)).astype(np.int32)
+    acc_slots = np.where(acc_eff < 0, n, np.minimum(acc_eff, n - 1)).astype(np.int32)
+    step = get_round_step(backend)
+    R = len(ks)
     jidx = jnp.arange(p)
 
     def body(xs):
@@ -357,38 +399,30 @@ def circulant_reduce_scatter(
         buf = jnp.concatenate(
             [rows.reshape(p, n, bs), jnp.zeros((p, 1, bs), xs.dtype)], axis=1
         ).astype(jnp.float32)
-        for (k, off) in reversed(rounds):
-            sk = bundle.skip[k]
-            # reverse of my forward receive: what I got, I now send
-            e_send = recv_t[(r - jidx) % p, k] + off
-            send_slot = jnp.where(e_send < 0, n, jnp.minimum(e_send, n - 1))
-            msg = jnp.take_along_axis(buf, send_slot[:, None, None], axis=1)
-            # drain after send (each partial flows along one tree edge)
-            buf = jax.lax.scatter(
-                buf, jnp.stack([jidx, send_slot], axis=-1),
-                jnp.zeros((p, bs), buf.dtype),
-                jax.lax.ScatterDimensionNumbers(
-                    update_window_dims=(1,), inserted_window_dims=(0, 1),
-                    scatter_dims_to_operand_dims=(0, 1)),
-                mode="promise_in_bounds",
-            )
+        F = jnp.asarray(fwd_slots)  # [R, p] static slot tables
+        A = jnp.asarray(acc_slots)
+        base = (r - jidx) % p
+        garbage = jnp.full((p,), n, jnp.int32)
+        # Initial capture+drain of round 0's forwarded partials (the acc
+        # part folds a zero message into the garbage slots -- a no-op).
+        buf, msg = step.acc_shuffle(
+            buf, jnp.zeros((p, bs), buf.dtype), garbage, F[0][base], op="sum"
+        )
+        for t in range(R):
+            sk = bundle.skip[int(ks[t])]
             got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, p - sk % p))
-            # accumulate into the reverse of my forward send slot
-            e_acc = recv_t[(r - jidx + sk) % p, k] + off
-            acc_slot = jnp.where(e_acc < 0, n, jnp.minimum(e_acc, n - 1))
-            buf = jax.lax.scatter_add(
-                buf, jnp.stack([jidx, acc_slot], axis=-1), got[:, 0, :],
-                jax.lax.ScatterDimensionNumbers(
-                    update_window_dims=(1,), inserted_window_dims=(0, 1),
-                    scatter_dims_to_operand_dims=(0, 1)),
-                mode="promise_in_bounds",
-            )
+            nxt = F[t + 1][base] if t + 1 < R else garbage
+            # accumulate round t's incoming partials, then capture+drain
+            # round t+1's forwards (drain-after-send: each partial flows
+            # along exactly one tree edge).
+            buf, msg = step.acc_shuffle(buf, got, A[t][base], nxt, op="sum")
         own = jax.lax.dynamic_slice(buf, (r, 0, 0), (1, n, bs))
         out = own.reshape(-1)[:shard].astype(xs.dtype)
         return out[None]
 
     shard_fn = _shard_map(
-        body, mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name)
+        body, mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
+        check_vma=(backend == "jnp"),
     )
     return shard_fn(x)
 
@@ -404,23 +438,6 @@ def circulant_reduce_scatter(
 # roles swapped -- no second table build).
 
 
-def _op_combine(op: str):
-    if op in ("sum", "+"):
-        return jnp.add
-    if op == "max":
-        return jnp.maximum
-    raise ValueError(f"unsupported reduction op {op!r} (use 'sum' or 'max')")
-
-
-def _op_identity(op: str, dtype) -> jnp.ndarray:
-    """Scalar identity of ``op`` in ``dtype`` (drained partials hold it)."""
-    if op in ("sum", "+"):
-        return jnp.zeros((), dtype)
-    if jnp.issubdtype(dtype, jnp.inexact):
-        return jnp.asarray(-jnp.inf, dtype)
-    return jnp.asarray(jnp.iinfo(dtype).min, dtype)
-
-
 def circulant_reduce(
     mesh: Mesh,
     axis_name: str,
@@ -429,6 +446,7 @@ def circulant_reduce(
     n_blocks: Optional[int] = None,
     root: int = 0,
     op: str = "sum",
+    backend: str = "jnp",
     model: CommModel = CommModel(),
 ):
     """Round-optimal n-block reduction to ``root`` (reversed Algorithm 1).
@@ -436,64 +454,65 @@ def circulant_reduce(
     ``x`` has a leading axis of size p sharded over ``axis_name`` (each
     rank owns one slice).  Returns an array of the same spec where the
     root's slice is the elementwise op-reduction of all slices and every
-    other slice is zero.  Runs in n-1+ceil(log2 p) ppermute rounds: the
-    reversed round for forward round (k, off) sends the partial of the
-    forward-*received* block to the forward from-neighbor (rotation by
-    -skip[k]) and accumulates the incoming partial into the
-    forward-*sent* block.  Partials are drained after each forward
-    (capture - drain - accumulate), so final-phase capped re-sends move
-    an already-emptied (identity) partial and every contribution reaches
-    the root exactly once.
+    other slice is zero.  Runs in the optimal ``n-1+ceil(log2 p)``
+    ppermute rounds -- the time reversal of the broadcast
+    (arXiv:2407.18004) inherits the forward schedule's optimal round
+    count and satisfies the reversed Correctness Conditions 3-4 checked
+    by ``verify_reversed_schedules``: the reversed round for forward round
+    (k, off) sends the partial of the forward-*received* block to the
+    forward from-neighbor (rotation by -skip[k]) and accumulates the
+    incoming partial into the forward-*sent* block.
+
+    Partials are drained after each forward (capture - drain -
+    accumulate), so final-phase capped re-sends move an already-emptied
+    (identity) partial and every contribution reaches the root exactly
+    once -- which makes ``op="sum"`` bit-exact, not just ``"max"``.
+    Buffers carry n+2 slots: slot n is garbage, slot n+1 pins the op
+    identity so the root (which never forwards a live partial) always
+    ships the identity.  ``backend`` selects the per-round data plane
+    ("jnp" or "pallas": the fused accumulate+capture/drain kernel), see
+    :mod:`repro.core.roundstep`.
     """
     p = mesh.shape[axis_name]
     if p == 1:
         return x
+    # Combine/identity semantics shared with the kernels and the jnp
+    # oracle -- one registry, so drained slots and the identity slot the
+    # data plane ships agree bit-for-bit (validates op before tracing).
+    from repro.kernels.reduce_ops import op_identity
+
     bundle = get_bundle(p, root)
     if x.shape[0] != p:
         raise ValueError("x must have leading axis == axis size (one slice/rank)")
-    combine = _op_combine(op)
     elems = int(np.prod(x.shape[1:]))
     n = n_blocks or max(1, optimal_num_blocks_reduce(p, elems * x.dtype.itemsize, model))
     n = min(n, max(1, elems))
-    recv_t, send_t = bundle.jnp_tables()
-    rounds = bundle.reversed_round_plan(n)
-    ident = _op_identity(op, x.dtype)
+    fwd_slots, acc_slots, ks = reduce_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
+    ident = op_identity(op, x.dtype)
 
     def body(xs):
         r = jax.lax.axis_index(axis_name)
         flat = xs.reshape(-1)
-        buf, bs, pad = _split_blocks(flat, n)
-        ident_blk = jnp.full((1, bs), ident, buf.dtype)
-        # Reversed roles: forward recv entries say what r forwards,
-        # forward send entries say what r accumulates.
-        my_fwd = recv_t[r]
-        my_acc = send_t[r]
-        is_root = r == root
-        for (k, off) in rounds:
-            sb = my_fwd[k] + off
-            ab = my_acc[k] + off
-            send_slot = jnp.where(sb < 0, n, jnp.minimum(sb, n - 1))
-            acc_slot = jnp.where(ab < 0, n, jnp.minimum(ab, n - 1))
-            out_blk = jax.lax.dynamic_slice_in_dim(buf, send_slot, 1, axis=0)
-            # The root never forwards: forward rounds never send TO the
-            # root, so reversed rounds never send FROM it (phase offsets
-            # can lift its negative entries in capped rounds -- those were
-            # the suppressed redundant re-sends).  It ships the identity
-            # instead, and drains only the garbage slot.
-            out_blk = jnp.where(is_root, ident_blk, out_blk)
-            drain_slot = jnp.where(is_root, n, send_slot)
-            # Drain after capture: the partial leaves this rank for good.
-            buf = jax.lax.dynamic_update_slice_in_dim(
-                buf, ident_blk, drain_slot, axis=0
-            )
+        buf, bs, pad = _split_blocks(flat, n)     # [n+1, bs]: data + garbage
+        buf = jnp.concatenate(
+            [buf, jnp.full((1, bs), ident, buf.dtype)], axis=0
+        )[None]                                   # [1, n+2, bs]: + identity slot
+        F = jnp.asarray(fwd_slots)  # [R, p] static slot tables (root row
+        A = jnp.asarray(acc_slots)  # pinned to the identity slot n+1)
+        garbage = jnp.full((1,), n, jnp.int32)
+        # Initial capture+drain of round 0's forwarded partial.
+        buf, msg = step.acc_shuffle(
+            buf, jnp.zeros((1, bs), buf.dtype), garbage, F[0, r][None], op=op
+        )
+        for t in range(R):
             got = jax.lax.ppermute(
-                out_blk, axis_name, _rot_perm(p, (p - bundle.skip[k]) % p)
+                msg, axis_name, _rot_perm(p, (p - bundle.skip[int(ks[t])]) % p)
             )
-            cur = jax.lax.dynamic_slice_in_dim(buf, acc_slot, 1, axis=0)
-            buf = jax.lax.dynamic_update_slice_in_dim(
-                buf, combine(cur, got), acc_slot, axis=0
-            )
-        out = buf[:n].reshape(-1)[: flat.shape[0]].reshape(xs.shape)
+            nxt = F[t + 1, r][None] if t + 1 < R else garbage
+            buf, msg = step.acc_shuffle(buf, got, A[t, r][None], nxt, op=op)
+        out = buf[0, :n].reshape(-1)[: flat.shape[0]].reshape(xs.shape)
         return jnp.where(r == root, out, jnp.zeros_like(out))
 
     shard = _shard_map(
@@ -501,6 +520,7 @@ def circulant_reduce(
         mesh=mesh,
         in_specs=P(axis_name),
         out_specs=P(axis_name),
+        check_vma=(backend == "jnp"),
     )
     return shard(x)
 
@@ -513,16 +533,22 @@ def circulant_allreduce(
     n_blocks: Optional[int] = None,
     root: int = 0,
     op: str = "sum",
+    backend: str = "jnp",
     model: CommModel = CommModel(),
 ):
-    """All-reduction in 2(n-1)+2*ceil(log2 p) ppermute rounds.
+    """All-reduction in the composed ``2(n-1)+2*ceil(log2 p)`` rounds.
 
     Reduce to ``root`` on the reversed schedule, then broadcast the
-    result back on the forward schedule -- both phases run on the same
-    cached ``get_bundle(p, root)`` tables and the same block count n, so
-    the composition is exactly twice the optimal single-collective round
-    count.  ``x`` is [p, ...] sharded over ``axis_name``; every output
-    slice equals the elementwise op-reduction of all input slices.
+    result back on the forward schedule (the reduce+broadcast
+    composition of arXiv:2407.18004) -- both phases run on the same
+    cached ``get_bundle(p, root)`` tables and the same block count n,
+    so the composition is exactly twice the optimal single-collective
+    round count ``n-1+ceil(log2 p)``.
+    ``x`` is [p, ...] sharded over ``axis_name``; every output slice
+    equals the elementwise op-reduction (``"sum"`` or ``"max"``, exact
+    per the capture-drain-accumulate rule of :func:`circulant_reduce`)
+    of all input slices.  ``backend`` selects the per-round data plane
+    for both phases ("jnp" or "pallas").
     """
     p = mesh.shape[axis_name]
     if p == 1:
@@ -533,10 +559,11 @@ def circulant_allreduce(
     n = n_blocks or max(1, optimal_num_blocks_reduce(p, elems * x.dtype.itemsize, model))
     n = min(n, max(1, elems))
     red = circulant_reduce(
-        mesh, axis_name, x, n_blocks=n, root=root, op=op, model=model
+        mesh, axis_name, x, n_blocks=n, root=root, op=op, backend=backend,
+        model=model,
     )
     return circulant_broadcast(
-        mesh, axis_name, red, n_blocks=n, root=root, model=model
+        mesh, axis_name, red, n_blocks=n, root=root, backend=backend, model=model
     )
 
 
@@ -546,16 +573,22 @@ def circulant_allbroadcast(
     x: jax.Array,
     *,
     n_blocks: Optional[int] = None,
+    backend: str = "jnp",
     model: CommModel = CommModel(),
 ):
-    """All-broadcast: every rank's slice reaches every rank (n-1+q rounds).
+    """All-broadcast: every rank's slice reaches every rank in the
+    optimal ``n-1+ceil(log2 p)`` rounds.
 
     The collective-family name (arXiv:2407.18004) for the all-to-all
-    broadcast; identical to :func:`circulant_allgather` -- each rank acts
-    as the root of its own forward broadcast, all p interleaved on the
-    same circulant graph with one packed message per round.
+    broadcast of Algorithm 2; identical to :func:`circulant_allgather`
+    -- each rank acts as the root of its own forward broadcast, all p
+    interleaved on the same circulant graph with one packed message per
+    round, so the round count matches the single-root broadcast.
+    ``backend`` selects the per-round data plane ("jnp" or "pallas").
     """
-    return circulant_allgather(mesh, axis_name, x, n_blocks=n_blocks, model=model)
+    return circulant_allgather(
+        mesh, axis_name, x, n_blocks=n_blocks, backend=backend, model=model
+    )
 
 
 # ----------------------------------------------------------- ring baseline

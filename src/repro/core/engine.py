@@ -170,6 +170,30 @@ class ScheduleBundle:
             out.append((k, q * ((i - k) // q) - x))
         return out
 
+    def per_round_tables(self, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Forward per-round tables: (recv_blocks, send_blocks, ks).
+
+        ``recv_blocks[t, r]`` / ``send_blocks[t, r]``: effective block
+        index real rank r receives / sends in forward round t (the phase
+        offset of :meth:`round_plan` folded in); ``ks[t]``: the skip
+        column of round t (rank r sends to ``(r + skip[ks[t]]) % p``).
+        Negative entries mean "idle this round"; entries > n-1 are capped
+        to n-1 by consumers (final-phase re-sends).
+
+        Derived *vectorized* from the cached tables -- one column gather
+        ``tab[:, ks].T`` plus the per-round offset broadcast.  This is
+        the data-plane contract: a round-step backend
+        (:mod:`repro.core.roundstep`) turns row t of these tables into
+        one pack/exchange/unpack step, with the whole [R, p] array
+        scalar-prefetchable by the Pallas kernels.
+        """
+        plan = self.round_plan(n)
+        ks = np.asarray([k for k, _ in plan], dtype=np.int64)
+        offs = np.asarray([off for _, off in plan], dtype=np.int64)
+        recv_blocks = self.recv[:, ks].T.astype(np.int64) + offs[:, None]
+        send_blocks = self.send[:, ks].T.astype(np.int64) + offs[:, None]
+        return recv_blocks, send_blocks, ks
+
     # ------------------------------------------------ reversed (reduction) side
     #
     # The recv/send schedules are time-reversible (Träff, arXiv:2407.18004):

@@ -1,0 +1,365 @@
+"""Pluggable per-round data plane for the collective family.
+
+The paper deliberately separates the O(log p) *schedule computation*
+from the per-round *data movement*, and the whole collective family
+(broadcast / all-broadcast / reduction / all-reduction, arXiv:2407.18004)
+shares one per-round inner step on its block buffers:
+
+  * broadcast family: ``pack`` one block per row into the outgoing
+    message -> exchange -> ``unpack`` into one slot per row;
+  * reduce family: capture the forwarded partial and drain its slot ->
+    exchange -> ``accumulate`` the incoming partial (sum/max).
+
+:class:`RoundStep` is that step as a small backend interface.  Buffers
+are ``[R, nslots, bs]`` arrays (R rows: one per rank in the batched
+simulator data plane, one per root in the all-gather family, a single
+row inside a per-rank ``shard_map`` body); slot vectors are ``[R]``
+int32 columns of the engine's per-round tables
+(:meth:`ScheduleBundle.per_round_tables` /
+:meth:`ScheduleBundle.reversed_per_round_tables`).
+
+Two backends implement it:
+
+  * ``"jnp"`` -- the pure-jnp reference (:mod:`repro.kernels.ref`):
+    gathers and ``.at[]`` scatters; lowers everywhere, used by default;
+  * ``"pallas"`` -- the fused Pallas kernels
+    (:mod:`repro.kernels.block_pack`): scalar-prefetched schedule
+    columns drive BlockSpec index maps, so block selection is pure DMA
+    index mapping; compiled on TPU, ``interpret=True`` elsewhere.
+
+Both backends implement identical update order (unpack-then-pack;
+accumulate-then-capture-then-drain), so they agree **bit-exactly** --
+asserted by the simulator certification harness
+(:func:`dataplane_broadcast` / :func:`dataplane_reduce` /
+:func:`dataplane_allgather`, wired into ``simulate_*(backend=...)``)
+and by the backend-parametrized collective tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "RoundStep",
+    "JnpRoundStep",
+    "PallasRoundStep",
+    "get_round_step",
+    "clamp_slots",
+    "broadcast_slot_plan",
+    "reduce_slot_plan",
+    "dataplane_broadcast",
+    "dataplane_allgather",
+    "dataplane_reduce",
+]
+
+BACKENDS = ("jnp", "pallas")
+
+
+# ------------------------------------------------------------ slot plans
+
+
+def clamp_slots(eff: np.ndarray, n: int, garbage: Optional[int] = None) -> np.ndarray:
+    """Effective block indices -> buffer slots: negative ("idle this
+    round") entries address the garbage slot, entries > n-1 are capped
+    to n-1 (final-phase re-sends), exactly as in Algorithm 1."""
+    g = n if garbage is None else garbage
+    return np.where(eff < 0, g, np.minimum(eff, n - 1)).astype(np.int32)
+
+
+def broadcast_slot_plan(bundle, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(recv_slots, send_slots, ks): clamped [R, p] forward slot tables.
+
+    Row t is the slot column of forward round t; buffers carry ``n+1``
+    slots with slot ``n`` the garbage slot (Correctness Condition 1
+    guarantees sender and receiver address garbage in the same rounds).
+    """
+    recv_eff, send_eff, ks = bundle.per_round_tables(n)
+    return clamp_slots(recv_eff, n), clamp_slots(send_eff, n), ks
+
+
+def reduce_slot_plan(bundle, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(fwd_slots, acc_slots, ks): clamped [R, p] reversed slot tables.
+
+    Buffers carry ``n+2`` slots: slot ``n`` is garbage, slot ``n+1``
+    holds the op identity and is never overwritten with data.  The root
+    never forwards a partial (forward rounds never send TO the root, so
+    reversed rounds never send FROM it) -- its fwd column is pinned to
+    the identity slot, so capped final-phase entries ship the identity
+    instead of a live partial.
+    """
+    fwd_eff, acc_eff, ks = bundle.reversed_per_round_tables(n)
+    fwd = clamp_slots(fwd_eff, n)
+    fwd[:, bundle.root] = n + 1
+    return fwd, clamp_slots(acc_eff, n), ks
+
+
+# ------------------------------------------------------------- interface
+
+
+class RoundStep:
+    """One collective round's data movement on [R, nslots, bs] buffers.
+
+    ``pack``/``unpack`` are the plain first/last-round primitives;
+    ``shuffle`` fuses unpack(t) + pack(t+1) for the broadcast family and
+    ``acc_shuffle`` fuses accumulate(t) + capture/drain(t+1) for the
+    reduce family -- one backend call per steady-state round.
+    """
+
+    backend: str
+
+    def pack(self, buf, idx):
+        """[R, S, B], [R] -> [R, B]: out[r] = buf[r, idx[r]]."""
+        raise NotImplementedError
+
+    def unpack(self, buf, msg, idx):
+        """buf[r, idx[r]] = msg[r]; untouched slots keep contents."""
+        raise NotImplementedError
+
+    def shuffle(self, buf, msg, recv_idx, send_idx):
+        """Fused unpack+pack -> (new_buf, out_msg); the pack reads the
+        *updated* buffer (pipeline: forward next what was just received)."""
+        raise NotImplementedError
+
+    def acc_shuffle(self, buf, msg, acc_idx, fwd_idx, *, op: str = "sum"):
+        """Fused accumulate+capture/drain -> (new_buf, out_msg):
+        buf[acc] op= msg, then out = buf[fwd] (post-accumulate when the
+        slots coincide), then buf[fwd] = identity(op, dtype)."""
+        raise NotImplementedError
+
+
+class JnpRoundStep(RoundStep):
+    """Pure-jnp reference backend (gathers + ``.at[]`` scatters).
+
+    Methods go through process-cached ``jax.jit`` wrappers, so eager
+    host-side use (the simulator data plane) amortizes tracing across
+    the sweep; inside an enclosing jit/shard_map trace they inline.
+    """
+
+    backend = "jnp"
+
+    def pack(self, buf, idx):
+        return _jnp_call("block_pack_ref", buf, idx)
+
+    def unpack(self, buf, msg, idx):
+        return _jnp_call("block_unpack_ref", buf, msg, idx)
+
+    def shuffle(self, buf, msg, recv_idx, send_idx):
+        return _jnp_call("block_shuffle_ref", buf, msg, recv_idx, send_idx)
+
+    def acc_shuffle(self, buf, msg, acc_idx, fwd_idx, *, op: str = "sum"):
+        return _jnp_call("block_acc_shuffle_ref", buf, msg, acc_idx, fwd_idx,
+                         op=op)
+
+
+_jnp_jits = {}
+
+
+def _jnp_call(name, *args, **static):
+    key = (name, tuple(sorted(static.items())))
+    if key not in _jnp_jits:
+        import functools
+
+        import jax
+
+        from repro.kernels import ref
+
+        fn = getattr(ref, name)
+        _jnp_jits[key] = jax.jit(functools.partial(fn, **static) if static
+                                 else fn)
+    return _jnp_jits[key](*args)
+
+
+class PallasRoundStep(RoundStep):
+    """Pallas fast path: scalar-prefetched schedule columns select the
+    HBM blocks to DMA.  ``interpret=None`` auto-detects the platform
+    (compiled on TPU, interpret-mode on CPU CI).  Calls route through
+    the jit'd :mod:`repro.kernels.ops` wrappers, so eager host-side use
+    hits the compile cache."""
+
+    backend = "pallas"
+
+    def __init__(self, interpret: Optional[bool] = None):
+        from repro.kernels.ops import resolve_interpret
+
+        self.interpret = resolve_interpret(interpret)
+
+    def pack(self, buf, idx):
+        from repro.kernels.ops import schedule_pack
+
+        return schedule_pack(buf, idx, interpret=self.interpret)
+
+    def unpack(self, buf, msg, idx):
+        from repro.kernels.ops import schedule_unpack
+
+        return schedule_unpack(buf, msg, idx, interpret=self.interpret)
+
+    def shuffle(self, buf, msg, recv_idx, send_idx):
+        from repro.kernels.ops import schedule_shuffle
+
+        return schedule_shuffle(buf, msg, recv_idx, send_idx,
+                                interpret=self.interpret)
+
+    def acc_shuffle(self, buf, msg, acc_idx, fwd_idx, *, op: str = "sum"):
+        from repro.kernels.ops import schedule_acc_shuffle
+
+        return schedule_acc_shuffle(buf, msg, acc_idx, fwd_idx, op=op,
+                                    interpret=self.interpret)
+
+
+def get_round_step(backend: str = "jnp",
+                   interpret: Optional[bool] = None) -> RoundStep:
+    """Round-step backend factory: ``"jnp"`` (portable reference) or
+    ``"pallas"`` (fused kernels; ``interpret`` as in
+    :func:`repro.kernels.ops.resolve_interpret`)."""
+    if backend == "jnp":
+        return JnpRoundStep()
+    if backend == "pallas":
+        return PallasRoundStep(interpret)
+    raise ValueError(
+        f"unknown round-step backend {backend!r} (use one of {BACKENDS})"
+    )
+
+
+# --------------------------------------------- host data-plane executors
+#
+# Single-process executions of the full collectives with the R rows of
+# the batched kernels standing in for the p ranks and the network
+# exchange realized as a row rotation (ppermute's rotation r -> (r+s)%p
+# is exactly jnp.roll along the rank axis).  The simulator runs these
+# next to its message-passing reference and asserts bit-exact agreement
+# -- the certification path for the Pallas backend on CPU CI.
+
+
+def _as_blocks(values: np.ndarray, lead: int) -> np.ndarray:
+    """Normalize payload values to [*lead_shape, n, bs] float/int blocks."""
+    arr = np.asarray(values)
+    return arr.reshape(arr.shape[: lead + 1] + (-1,)) if arr.ndim > lead + 1 \
+        else arr.reshape(arr.shape[: lead + 1] + (1,))
+
+
+def _x64():
+    """Certification runs in the values' own precision: without this,
+    ``jnp.asarray`` silently downcasts the reference's int64/float64
+    payloads and "bit-exact" would be vacuous (or int32-overflow wrong).
+    """
+    from jax.experimental import enable_x64
+
+    return enable_x64()
+
+
+def dataplane_broadcast(p: int, n: int, root: int, values: np.ndarray,
+                        backend: str,
+                        interpret: Optional[bool] = None) -> np.ndarray:
+    """Execute the n-block broadcast data plane on host arrays.
+
+    ``values``: [n] (or [n, bs]) block payloads at the root.  Returns
+    the final [p, n, bs] data slots of every rank.
+    """
+    import jax.numpy as jnp
+
+    from .engine import get_bundle
+
+    vals = _as_blocks(values, 0)                     # [n, bs]
+    bundle = get_bundle(p, root)
+    recv_slots, send_slots, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend, interpret)
+    buf = np.zeros((p, n + 1, vals.shape[-1]), vals.dtype)
+    buf[root, :n] = vals
+    R = len(ks)
+    with _x64():
+        buf = jnp.asarray(buf)
+        msg = step.pack(buf, jnp.asarray(send_slots[0]))
+        for t in range(R):
+            got = jnp.roll(msg, bundle.skip[int(ks[t])], axis=0)
+            if t + 1 < R:
+                buf, msg = step.shuffle(buf, got, jnp.asarray(recv_slots[t]),
+                                        jnp.asarray(send_slots[t + 1]))
+            else:
+                buf = step.unpack(buf, got, jnp.asarray(recv_slots[t]))
+        return np.asarray(buf)[:, :n]
+
+
+def dataplane_allgather(p: int, n: int, values: np.ndarray, backend: str,
+                        interpret: Optional[bool] = None) -> np.ndarray:
+    """Execute the all-to-all broadcast data plane on host arrays.
+
+    ``values``: [p, n] (or [p, n, bs]) -- root j's block payloads.  The
+    [p_rank, p_root] buffer grid is flattened rank-major onto the kernel
+    rows, so the exchange is a roll by ``skip * p`` flat rows.  Returns
+    the final [p_rank, p_root, n, bs] data slots.
+    """
+    import jax.numpy as jnp
+
+    from .engine import get_bundle
+
+    vals = _as_blocks(values, 1)                     # [p, n, bs]
+    bundle = get_bundle(p)
+    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend, interpret)
+    bs = vals.shape[-1]
+    buf = np.zeros((p, p, n + 1, bs), vals.dtype)
+    for j in range(p):
+        buf[j, j, :n] = vals[j]
+    ranks = np.arange(p)[:, None]
+    roots = np.arange(p)[None, :]
+    base = (ranks - roots) % p                       # [p_rank, p_root]
+    R = len(ks)
+
+    def slots(t, shift):
+        return jnp.asarray(recv_slots[t][(base + shift) % p].reshape(-1))
+
+    with _x64():
+        buf = jnp.asarray(buf.reshape(p * p, n + 1, bs))
+        msg = step.pack(buf, slots(0, bundle.skip[int(ks[0])]))
+        for t in range(R):
+            sk = bundle.skip[int(ks[t])]
+            got = jnp.roll(msg.reshape(p, p, bs), sk, axis=0).reshape(p * p, bs)
+            if t + 1 < R:
+                buf, msg = step.shuffle(buf, got, slots(t, 0),
+                                        slots(t + 1, bundle.skip[int(ks[t + 1])]))
+            else:
+                buf = step.unpack(buf, got, slots(t, 0))
+        return np.asarray(buf).reshape(p, p, n + 1, bs)[:, :, :n]
+
+
+def dataplane_reduce(p: int, n: int, root: int, values: np.ndarray, op: str,
+                     backend: str,
+                     interpret: Optional[bool] = None) -> np.ndarray:
+    """Execute the reversed-schedule reduction data plane on host arrays.
+
+    ``values``: [p, n] (or [p, n, bs]) per-rank block contributions.
+    Returns the final [p, n, bs] data slots (row ``root`` holds the
+    op-reduction; other rows are drained to the identity).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.reduce_ops import op_identity
+
+    from .engine import get_bundle
+
+    vals = _as_blocks(values, 1)                     # [p, n, bs]
+    bundle = get_bundle(p, root)
+    fwd_slots, acc_slots, ks = reduce_slot_plan(bundle, n)
+    step = get_round_step(backend, interpret)
+    bs = vals.shape[-1]
+    ident = op_identity(op, vals.dtype)
+    npbuf = np.concatenate(
+        [vals, np.zeros((p, 1, bs), vals.dtype),          # garbage slot n
+         np.full((p, 1, bs), ident, vals.dtype)], axis=1  # identity slot n+1
+    )
+    R = len(ks)
+    with _x64():
+        buf = jnp.asarray(npbuf)
+        garbage = jnp.full((p,), n, jnp.int32)
+        # Initial capture+drain of round 0's forwarded partials (the acc
+        # part folds a zero message into the garbage slot -- a no-op).
+        buf, msg = step.acc_shuffle(buf, jnp.zeros((p, bs), buf.dtype),
+                                    garbage, jnp.asarray(fwd_slots[0]), op=op)
+        for t in range(R):
+            got = jnp.roll(msg, -bundle.skip[int(ks[t])], axis=0)
+            nxt = jnp.asarray(fwd_slots[t + 1]) if t + 1 < R else garbage
+            buf, msg = step.acc_shuffle(buf, got, jnp.asarray(acc_slots[t]),
+                                        nxt, op=op)
+        return np.asarray(buf)[:, :n]

@@ -8,6 +8,15 @@ completes in exactly its optimal round count (n-1+q for broadcast /
 all-broadcast / reduction, 2(n-1)+2q for the composed all-reduction).
 This is the end-to-end functional oracle for the schedule constructions
 (and doubles as a latency/volume counter for the benchmark cost models).
+
+Backend certification: passing ``backend="jnp"`` or ``backend="pallas"``
+additionally executes the collective's *data plane* -- the actual
+round-step implementation of :mod:`repro.core.roundstep`, with the p
+simulated ranks batched onto the kernel rows and the network exchange
+realized as a row rotation -- and asserts that its final buffers match
+the message-passing reference **bit-exactly**.  This is how the Pallas
+(interpret-mode) kernels are certified against the NumPy reference on
+CPU CI without any devices.
 """
 
 from __future__ import annotations
@@ -46,6 +55,7 @@ class SimResult:
     messages: int = 0                # point-to-point messages sent
     blocks_moved: int = 0            # total blocks transferred
     buffers: Optional[list] = None   # final per-processor buffers
+    backend: Optional[str] = None    # data-plane backend certified (or None)
 
 
 def simulate_broadcast(
@@ -54,6 +64,7 @@ def simulate_broadcast(
     root: int = 0,
     keep_buffers: bool = False,
     payloads: Optional[List] = None,
+    backend: Optional[str] = None,
 ) -> SimResult:
     """Algorithm 1: broadcast n blocks from ``root`` to all p processors.
 
@@ -63,6 +74,10 @@ def simulate_broadcast(
     (e.g. the all-reduction return path), delivered and checked
     verbatim.  The rooted engine bundle indexes schedules by real rank
     (rank renumbering of paper §2.1 folded in by the engine).
+
+    ``backend`` ("jnp" / "pallas") additionally executes the round-step
+    data plane on the numeric payloads and asserts bit-exact agreement
+    with this reference on every rank (see module docstring).
     """
     pay = list(payloads) if payloads is not None else list(range(n))
     assert len(pay) == n
@@ -71,7 +86,7 @@ def simulate_broadcast(
     for j in range(n):
         buf[root][j] = pay[j]
 
-    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n))
+    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n), backend=backend)
     if p == 1:
         res.buffers = buf if keep_buffers else None
         return res
@@ -126,6 +141,18 @@ def simulate_broadcast(
                 f"p={p} n={n}: rank {r} missing block {j}"
             )
     assert res.rounds == res.optimal_rounds
+    if backend is not None:
+        from .roundstep import dataplane_broadcast
+
+        vals = np.asarray(pay)
+        got = dataplane_broadcast(p, n, root, vals, backend)
+        expect = got[root]  # reference payloads in data-plane block shape
+        assert np.array_equal(expect.reshape(vals.shape), vals)
+        for r in range(p):
+            assert np.array_equal(got[r], expect), (
+                f"p={p} n={n} root={root}: {backend} data plane diverged "
+                f"from the reference at rank {r}"
+            )
     res.buffers = buf if keep_buffers else None
     return res
 
@@ -135,12 +162,15 @@ def simulate_allgather(
     n: int,
     sizes: Optional[List[int]] = None,
     keep_buffers: bool = False,
+    backend: Optional[str] = None,
 ) -> SimResult:
     """Algorithm 2: all-to-all broadcast (irregular allgather).
 
     Every processor j contributes n blocks (of per-processor size
     sizes[j] if given; sizes only affect the volume counter).  Verifies
     that after n-1+q rounds every processor holds all p*n blocks.
+    ``backend`` additionally certifies the round-step data plane
+    bit-exactly, as in :func:`simulate_broadcast`.
     """
     bundle = get_bundle(p)
     q, skip = bundle.q, bundle.skips
@@ -158,7 +188,7 @@ def simulate_allgather(
         for blk in range(n):
             buf[j][j][blk] = (j, blk)
 
-    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n))
+    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n), backend=backend)
     if p == 1:
         res.buffers = buf if keep_buffers else None
         return res
@@ -219,6 +249,17 @@ def simulate_allgather(
                     f"p={p} n={n}: rank {r} missing block ({j},{blk})"
                 )
     assert res.rounds == res.optimal_rounds
+    if backend is not None:
+        from .roundstep import dataplane_allgather
+
+        # Distinct (root, block) payload values, delivered everywhere.
+        vals = np.arange(p * n, dtype=np.int64).reshape(p, n) * 7 + 3
+        got = dataplane_allgather(p, n, vals, backend)
+        for r in range(p):
+            assert np.array_equal(got[r].reshape(p, n), vals), (
+                f"p={p} n={n}: {backend} data plane diverged from the "
+                f"reference at rank {r}"
+            )
     res.buffers = buf if keep_buffers else None
     return res
 
@@ -228,6 +269,7 @@ def simulate_allbroadcast(
     n: int,
     sizes: Optional[List[int]] = None,
     keep_buffers: bool = False,
+    backend: Optional[str] = None,
 ) -> SimResult:
     """All-broadcast (the paper's name for all-to-all broadcast).
 
@@ -235,7 +277,9 @@ def simulate_allbroadcast(
     the same n-1+q rounds; identical to :func:`simulate_allgather`, kept
     under the collective-family name of arXiv:2407.18004.
     """
-    return simulate_allgather(p, n, sizes=sizes, keep_buffers=keep_buffers)
+    return simulate_allgather(
+        p, n, sizes=sizes, keep_buffers=keep_buffers, backend=backend
+    )
 
 
 # --------------------------------------------------- reversed schedules
@@ -248,6 +292,7 @@ def simulate_reduce(
     op: str = "+",
     values: Optional[np.ndarray] = None,
     keep_buffers: bool = True,
+    backend: Optional[str] = None,
 ) -> SimResult:
     """Reduction of n blocks to ``root`` by time-reversing Algorithm 1.
 
@@ -263,6 +308,11 @@ def simulate_reduce(
 
     ``res.buffers[r][j]`` is rank r's final partial of block j (the
     op-identity is represented as None; ``buffers[root]`` is the result).
+    ``backend`` ("jnp" / "pallas") additionally executes the reversed
+    round-step data plane -- the fused accumulate+capture/drain kernel
+    over all p ranks at once -- and asserts the root's result matches
+    this reference bit-exactly (for float ``+`` too: both accumulate in
+    the same schedule order).
     """
     opf = _OPS[op]
     if values is None:
@@ -277,7 +327,7 @@ def simulate_reduce(
     ]
     contrib: List[List[set]] = [[{r} for _ in range(n)] for r in range(p)]
 
-    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n))
+    res = SimResult(rounds=0, optimal_rounds=num_rounds(p, n), backend=backend)
     if p == 1:
         res.buffers = vals if keep_buffers else None
         return res
@@ -341,6 +391,15 @@ def simulate_reduce(
                 f"p={p} n={n}: rank {r} kept a partial of block {j}"
             )
     assert res.rounds == res.optimal_rounds
+    if backend is not None:
+        from .roundstep import dataplane_reduce
+
+        got = dataplane_reduce(p, n, root, values, op, backend)
+        ref_root = np.stack([np.asarray(vals[root][j]) for j in range(n)])
+        assert np.array_equal(got[root].reshape(ref_root.shape), ref_root), (
+            f"p={p} n={n} root={root} op={op}: {backend} data plane "
+            f"diverged from the reference reduction"
+        )
     res.buffers = vals if keep_buffers else None
     return res
 
@@ -352,6 +411,7 @@ def simulate_allreduce(
     op: str = "+",
     values: Optional[np.ndarray] = None,
     keep_buffers: bool = True,
+    backend: Optional[str] = None,
 ) -> SimResult:
     """All-reduction: reduce to ``root`` then broadcast the result back.
 
@@ -360,17 +420,25 @@ def simulate_allreduce(
     exactly 2(n-1) + 2*ceil(log2 p) rounds.  The return path runs the
     payload-checked Algorithm-1 simulation carrying the reduced blocks,
     so every rank provably ends with the op-reduction of every block.
+    ``backend`` certifies the round-step data plane of *both* phases
+    bit-exactly against the reference, as in :func:`simulate_reduce` /
+    :func:`simulate_broadcast`.
     """
-    red = simulate_reduce(p, n, root=root, op=op, values=values, keep_buffers=True)
+    red = simulate_reduce(
+        p, n, root=root, op=op, values=values, keep_buffers=True,
+        backend=backend,
+    )
     res = SimResult(
         rounds=red.rounds,
         optimal_rounds=2 * num_rounds(p, n),
         messages=red.messages,
         blocks_moved=red.blocks_moved,
+        backend=backend,
     )
     reduced = red.buffers[root]
     bcast = simulate_broadcast(
-        p, n, root=root, keep_buffers=keep_buffers, payloads=reduced
+        p, n, root=root, keep_buffers=keep_buffers, payloads=reduced,
+        backend=backend,
     )
     res.rounds += bcast.rounds
     res.messages += bcast.messages

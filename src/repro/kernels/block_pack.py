@@ -1,35 +1,82 @@
-"""Schedule-driven block pack/unpack Pallas kernels (paper Algorithm 2).
+"""Schedule-driven block data-plane Pallas kernels (the per-round hot path).
 
-The all-to-all broadcast packs, per round, one block per root processor
-into a contiguous message: ``tempin[j'] = buffers[j][sendblocks[j][k]]``.
-On TPU this is a gather whose indices are the *schedule* -- known before
-the kernel runs but data-dependent per rank.  PrefetchScalarGridSpec
-passes the index vector as a scalar-prefetch argument so the BlockSpec
-index_map can select which HBM block to DMA into VMEM: the pack becomes
-pure DMA scheduling, zero compute, exactly matching the paper's
-"packing ... bounded by the total size of all buffers" requirement.
+Every collective in the family runs the same per-round inner step on its
+block buffers (paper Algorithms 1-2 and the reversed reduction of
+arXiv:2407.18004):
 
-``block_unpack`` is the inverse scatter (tempout -> buffers[recvblock]).
+  * broadcast family -- ``pack`` one block per row into the outgoing
+    message, exchange, ``unpack`` the incoming message into one slot per
+    row;
+  * reduce family -- capture the forwarded partial, drain its slot to
+    the op identity, exchange, ``accumulate`` the incoming partial.
+
+The block *selection* is the schedule: per-round int32 index vectors
+known before the kernel runs but data-dependent per rank / per root row.
+``PrefetchScalarGridSpec`` passes them as scalar-prefetch arguments so
+every BlockSpec index_map can pick which HBM block to DMA into VMEM --
+the pack/unpack becomes pure DMA scheduling with zero real compute,
+exactly the paper's "packing ... bounded by the total size of all
+buffers" requirement.
+
+Two *fused* kernels cover the steady state with one ``pallas_call`` per
+round instead of two:
+
+  * :func:`block_shuffle` -- unpack round t's received message, then
+    pack round t+1's outgoing block from the *updated* buffer (the
+    pipeline case "forward next what you just received" falls out of the
+    in-kernel write-then-select ordering);
+  * :func:`block_acc_shuffle` -- accumulate round t's incoming partial
+    (sum/max with dtype identities), then capture round t+1's forwarded
+    partial and drain its slot to the identity
+    (capture-drain-accumulate, see docs/collectives.md).
+
+All kernels run under ``interpret=True`` on CPU CI bit-exactly against
+the jnp reference backend (:mod:`repro.core.roundstep`); on TPU the same
+code compiles with the index maps lowered to DMA descriptors.  The
+fused kernels pass the buffer twice (one read-only operand, one aliased
+to the output) so no in-kernel value ever depends on reading back a
+block written earlier in the same grid -- the interpret and compiled
+modes cannot diverge.
 """
 
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Single source for combine/identity semantics across kernels, the jnp
+# oracles and the collectives (re-exported here for consumers that only
+# know the kernel module).
+from .reduce_ops import op_combine, op_identity
+
+
+def default_interpret() -> bool:
+    """Auto-detected interpret mode: compiled on TPU, interpreted elsewhere."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve(interpret):
+    return default_interpret() if interpret is None else interpret
+
+
+# ------------------------------------------------------------------- pack
+
 
 def _pack_kernel(idx_ref, buf_ref, out_ref):
     # the interesting work happened in the index_map DMA; just copy VMEM->VMEM
+    del idx_ref
     out_ref[...] = buf_ref[0]
 
 
-def block_pack(buffers: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = True):
+def block_pack(buffers: jnp.ndarray, idx: jnp.ndarray, *, interpret=None):
     """buffers: [R, nslots, bs]; idx: [R] int32 slot per row -> [R, bs].
 
     Row r of the output is buffers[r, idx[r]]; the slot choice is the
-    send schedule for the round.
+    send schedule column for the round.
     """
     R, nslots, bs = buffers.shape
 
@@ -45,17 +92,20 @@ def block_pack(buffers: jnp.ndarray, idx: jnp.ndarray, *, interpret: bool = True
         _pack_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R, bs), buffers.dtype),
-        interpret=interpret,
+        interpret=_resolve(interpret),
     )(idx.astype(jnp.int32), buffers)
 
 
+# ----------------------------------------------------------------- unpack
+
+
 def _unpack_kernel(idx_ref, msg_ref, buf_ref, out_ref):
-    del buf_ref  # aliased with the output; untouched slots keep contents
+    del idx_ref, buf_ref  # aliased with the output; untouched slots keep contents
     out_ref[0] = msg_ref[...]
 
 
 def block_unpack(buffers: jnp.ndarray, msg: jnp.ndarray, idx: jnp.ndarray,
-                 *, interpret: bool = True):
+                 *, interpret=None):
     """Scatter msg rows into per-row slots: buffers[r, idx[r]] = msg[r].
 
     Implemented with an input-output alias so untouched slots keep their
@@ -77,5 +127,142 @@ def block_unpack(buffers: jnp.ndarray, msg: jnp.ndarray, idx: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
         input_output_aliases={2: 0},   # buffers (3rd operand) -> output
-        interpret=interpret,
+        interpret=_resolve(interpret),
     )(idx.astype(jnp.int32), msg, buffers)
+
+
+# ------------------------------------------- fused unpack+pack (broadcast)
+
+
+def _shuffle_kernel(recv_ref, send_ref, msg_ref, ro_ref, alias_ref,
+                    outbuf_ref, outmsg_ref):
+    r = pl.program_id(0)
+    del alias_ref  # aliased with outbuf; untouched slots keep contents
+    # unpack: the received message lands in this row's recv slot
+    outbuf_ref[...] = msg_ref[...][None]
+    # pack from the UPDATED buffer: when the next send slot is the slot
+    # just written (the broadcast pipeline "forward what you received"),
+    # the outgoing block is the message itself; otherwise it is the
+    # DMA-selected old block.  No read-back of a freshly written block.
+    same = recv_ref[r] == send_ref[r]
+    outmsg_ref[...] = jnp.where(same, msg_ref[...], ro_ref[0, 0])
+
+
+def block_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
+                  recv_idx: jnp.ndarray, send_idx: jnp.ndarray,
+                  *, interpret=None):
+    """Fused unpack(t) + pack(t+1) for the broadcast family.
+
+    buffers: [R, nslots, bs]; msg: [R, bs] received this round;
+    recv_idx/send_idx: [R] int32 slots.  Returns ``(new_buffers,
+    out_msg)`` where ``new_buffers[r, recv_idx[r]] = msg[r]`` and
+    ``out_msg[r] = new_buffers[r, send_idx[r]]`` (i.e. the pack sees the
+    unpack's write -- the round-t+1 send of a round-t delivery).
+    """
+    R, nslots, bs = buffers.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda r, ri, si: (r, 0)),
+            # read-only buffer view: the send block (pre-update content)
+            pl.BlockSpec((1, 1, bs), lambda r, ri, si: (r, si[r], 0)),
+            # aliased buffer: the recv block (overwritten by the kernel)
+            pl.BlockSpec((1, 1, bs), lambda r, ri, si: (r, ri[r], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bs), lambda r, ri, si: (r, ri[r], 0)),
+            pl.BlockSpec((1, bs), lambda r, ri, si: (r, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _shuffle_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
+            jax.ShapeDtypeStruct((R, bs), buffers.dtype),
+        ],
+        input_output_aliases={4: 0},   # 2nd buffer operand -> new_buffers
+        interpret=_resolve(interpret),
+    )(recv_idx.astype(jnp.int32), send_idx.astype(jnp.int32),
+      msg, buffers, buffers)
+
+
+# ------------------------------------- fused accumulate+capture (reduce)
+
+
+def _acc_shuffle_kernel(acc_ref, fwd_ref, msg_ref, ro_ref, alias_ref,
+                        outbuf_ref, outmsg_ref, scratch_ref, *, op, identity):
+    r = pl.program_id(0)
+    s = pl.program_id(1)
+    # s == 0: accumulate the incoming partial into the acc slot.
+    # s == 1: drain the (next round's) fwd slot to the identity.
+    # The captured outgoing partial is staged through VMEM scratch at
+    # s == 0, computed from pre-update values only (combined when the
+    # fwd slot IS the acc slot, the old fwd block otherwise) -- never by
+    # reading back a block written earlier in the grid, so interpret and
+    # compiled modes agree bit-for-bit.
+    combined = op_combine(op)(alias_ref[0, 0], msg_ref[...])
+
+    @pl.when(s == 0)
+    def _():
+        same = acc_ref[r] == fwd_ref[r]
+        scratch_ref[...] = jnp.where(same, combined, ro_ref[0, 0])
+
+    ident = jnp.full_like(msg_ref[...], identity)
+    outbuf_ref[...] = jnp.where(s == 0, combined, ident)[None]
+    outmsg_ref[...] = scratch_ref[...]
+
+
+def block_acc_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
+                      acc_idx: jnp.ndarray, fwd_idx: jnp.ndarray,
+                      *, op: str = "sum", interpret=None):
+    """Fused accumulate(t) + capture/drain(t+1) for the reduce family.
+
+    buffers: [R, nslots, bs]; msg: [R, bs] incoming partials;
+    acc_idx/fwd_idx: [R] int32 slots.  Per row r, in order:
+
+      1. ``buffers[r, acc_idx[r]] op= msg[r]``   (accumulate, round t)
+      2. ``out_msg[r] = buffers[r, fwd_idx[r]]`` (capture, round t+1 --
+         sees step 1's result when the slots coincide)
+      3. ``buffers[r, fwd_idx[r]] = identity(op, dtype)``  (drain)
+
+    ``op`` is ``"sum"`` (identity 0) or ``"max"`` (identity -inf /
+    integer min).  Returns ``(new_buffers, out_msg)``.
+    """
+    R, nslots, bs = buffers.shape
+    identity = op_identity(op, buffers.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R, 2),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
+            # read-only buffer view: the fwd block (pre-update content)
+            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
+            # aliased buffer: acc block at s=0, fwd block at s=1
+            pl.BlockSpec(
+                (1, 1, bs),
+                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, bs),
+                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
+            ),
+            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bs), buffers.dtype)],
+    )
+    kern = functools.partial(_acc_shuffle_kernel, op=op, identity=identity)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
+            jax.ShapeDtypeStruct((R, bs), buffers.dtype),
+        ],
+        input_output_aliases={4: 0},   # 2nd buffer operand -> new_buffers
+        interpret=_resolve(interpret),
+    )(acc_idx.astype(jnp.int32), fwd_idx.astype(jnp.int32),
+      msg, buffers, buffers)

@@ -7,15 +7,43 @@ dry-run), while tests and TPU deployments enable the kernels.
 
 from __future__ import annotations
 
+import logging
 from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .block_pack import block_pack, block_unpack
+from .block_pack import (
+    block_acc_shuffle,
+    block_pack,
+    block_shuffle,
+    block_unpack,
+    default_interpret,
+)
 from .flash_attention import flash_attention
 from .ssd_scan import ssd_scan
+
+logger = logging.getLogger(__name__)
+
+_mode_logged = False
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto-detect the platform: compiled on TPU, interpret
+    elsewhere (so CPU CI still runs every kernel).  Logs the chosen mode
+    once per process."""
+    global _mode_logged
+    if interpret is None:
+        interpret = default_interpret()
+        if not _mode_logged:
+            logger.info(
+                "repro.kernels: pallas %s mode (platform=%s)",
+                "interpret" if interpret else "compiled",
+                jax.default_backend(),
+            )
+            _mode_logged = True
+    return interpret
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
@@ -59,10 +87,53 @@ def mamba2_ssd(x, B_, C_, dt, A_log, D, *, chunk=64, interpret=True):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def schedule_pack(buffers, idx, *, interpret=True):
+def _schedule_pack(buffers, idx, *, interpret):
     return block_pack(buffers, idx, interpret=interpret)
 
 
+def schedule_pack(buffers, idx, *, interpret=None):
+    """Pack one block per row: ``out[r] = buffers[r, idx[r]]``.
+
+    ``interpret=None`` auto-detects the platform (compiled on TPU,
+    interpret-mode elsewhere) and logs the chosen mode once.
+    """
+    return _schedule_pack(buffers, idx, interpret=resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("interpret",))
-def schedule_unpack(buffers, msg, idx, *, interpret=True):
+def _schedule_unpack(buffers, msg, idx, *, interpret):
     return block_unpack(buffers, msg, idx, interpret=interpret)
+
+
+def schedule_unpack(buffers, msg, idx, *, interpret=None):
+    """Scatter msg rows into per-row slots: ``buffers[r, idx[r]] = msg[r]``.
+
+    ``interpret=None`` auto-detects the platform, as in
+    :func:`schedule_pack`.
+    """
+    return _schedule_unpack(buffers, msg, idx,
+                            interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _schedule_shuffle(buffers, msg, recv_idx, send_idx, *, interpret):
+    return block_shuffle(buffers, msg, recv_idx, send_idx, interpret=interpret)
+
+
+def schedule_shuffle(buffers, msg, recv_idx, send_idx, *, interpret=None):
+    """Fused unpack(t)+pack(t+1) round step for the broadcast family."""
+    return _schedule_shuffle(buffers, msg, recv_idx, send_idx,
+                             interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("op", "interpret"))
+def _schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, *, op, interpret):
+    return block_acc_shuffle(buffers, msg, acc_idx, fwd_idx, op=op,
+                             interpret=interpret)
+
+
+def schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, *, op="sum",
+                         interpret=None):
+    """Fused accumulate(t)+capture/drain(t+1) round step (reduce family)."""
+    return _schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, op=op,
+                                 interpret=resolve_interpret(interpret))

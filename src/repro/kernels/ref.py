@@ -35,6 +35,37 @@ def block_unpack_ref(buffers, msg, idx):
     return buffers.at[jnp.arange(buffers.shape[0]), idx].set(msg)
 
 
+def block_shuffle_ref(buffers, msg, recv_idx, send_idx):
+    """Fused unpack+pack oracle: write msg at recv slots, then read the
+    send slots from the UPDATED buffer (pipeline: a round-t delivery may
+    be the round-t+1 send).  Returns (new_buffers, out_msg)."""
+    rows = jnp.arange(buffers.shape[0])
+    buffers = buffers.at[rows, recv_idx].set(msg, mode="promise_in_bounds")
+    out = jnp.take_along_axis(buffers, send_idx[:, None, None], axis=1)[:, 0]
+    return buffers, out
+
+
+def block_acc_shuffle_ref(buffers, msg, acc_idx, fwd_idx, op="sum"):
+    """Fused accumulate+capture/drain oracle (capture-drain-accumulate
+    order of docs/collectives.md): accumulate msg into the acc slots,
+    capture the fwd slots from the updated buffer, then drain the fwd
+    slots to the op identity.  Returns (new_buffers, out_msg)."""
+    from .reduce_ops import op_combine, op_identity
+
+    combine = op_combine(op)
+    rows = jnp.arange(buffers.shape[0])
+    cur = jnp.take_along_axis(buffers, acc_idx[:, None, None], axis=1)[:, 0]
+    buffers = buffers.at[rows, acc_idx].set(
+        combine(cur, msg), mode="promise_in_bounds"
+    )
+    out = jnp.take_along_axis(buffers, fwd_idx[:, None, None], axis=1)[:, 0]
+    ident = op_identity(op, buffers.dtype)
+    buffers = buffers.at[rows, fwd_idx].set(
+        jnp.full_like(out, ident), mode="promise_in_bounds"
+    )
+    return buffers, out
+
+
 def ssd_ref(x, B_, C_, dt, A_log, D):
     """Sequential SSD recurrence oracle.  x: [BH, S, P]; B_/C_: [BH, S, N];
     dt: [BH, S]; A_log/D: scalars per row [BH]."""

@@ -13,6 +13,7 @@ import sys
 if __name__ == "__main__":
     what = sys.argv[1] if len(sys.argv) > 1 else "all"
     p = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+    backend = sys.argv[3] if len(sys.argv) > 3 else "jnp"
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={p}"
     )
@@ -41,33 +42,36 @@ def sharded(mesh, arr):
     return jax.device_put(arr, NamedSharding(mesh, P("data")))
 
 
-def check_broadcast(p, n_blocks, root, elems=97, dtype=jnp.float32):
+def check_broadcast(p, n_blocks, root, elems=97, dtype=jnp.float32,
+                    backend="jnp"):
     mesh = make_mesh(p)
     rng = np.random.default_rng(0)
     data = rng.normal(size=(p, elems)).astype(dtype)
     x = sharded(mesh, jnp.asarray(data))
     out = jax.jit(
-        lambda a: circulant_broadcast(mesh, "data", a, n_blocks=n_blocks, root=root)
+        lambda a: circulant_broadcast(mesh, "data", a, n_blocks=n_blocks,
+                                      root=root, backend=backend)
     )(x)
     out = np.asarray(out)
     for r in range(p):
         np.testing.assert_allclose(out[r], data[root], rtol=0, atol=0)
-    print(f"broadcast p={p} n={n_blocks} root={root} ok")
+    print(f"broadcast p={p} n={n_blocks} root={root} backend={backend} ok")
 
 
-def check_allgather(p, n_blocks, elems=64, dtype=jnp.float32):
+def check_allgather(p, n_blocks, elems=64, dtype=jnp.float32, backend="jnp"):
     mesh = make_mesh(p)
     rng = np.random.default_rng(1)
     data = rng.normal(size=(p * elems,)).astype(dtype)
     x = sharded(mesh, jnp.asarray(data))
     out = jax.jit(
-        lambda a: circulant_allgather(mesh, "data", a, n_blocks=n_blocks)
+        lambda a: circulant_allgather(mesh, "data", a, n_blocks=n_blocks,
+                                      backend=backend)
     )(x)
     np.testing.assert_allclose(np.asarray(out), data, rtol=0, atol=0)
-    print(f"allgather p={p} n={n_blocks} ok")
+    print(f"allgather p={p} n={n_blocks} backend={backend} ok")
 
 
-def check_allgatherv(p, n_blocks, sizes, dtype=jnp.int32):
+def check_allgatherv(p, n_blocks, sizes, dtype=jnp.int32, backend="jnp"):
     mesh = make_mesh(p)
     cap = max(max(sizes), 1)
     rng = np.random.default_rng(2)
@@ -76,12 +80,13 @@ def check_allgatherv(p, n_blocks, sizes, dtype=jnp.int32):
         rows[j, : sizes[j]] = rng.integers(0, 1000, size=sizes[j])
     x = sharded(mesh, jnp.asarray(rows))
     out = jax.jit(
-        lambda a: circulant_allgatherv(mesh, "data", a, sizes, n_blocks=n_blocks)
+        lambda a: circulant_allgatherv(mesh, "data", a, sizes,
+                                       n_blocks=n_blocks, backend=backend)
     )(x)
     out = np.asarray(out)
     for j in range(p):
         np.testing.assert_array_equal(out[j, : sizes[j]], rows[j, : sizes[j]])
-    print(f"allgatherv p={p} n={n_blocks} sizes={sizes} ok")
+    print(f"allgatherv p={p} n={n_blocks} sizes={sizes} backend={backend} ok")
 
 
 def check_compressed_allreduce(p, elems=2048):
@@ -151,7 +156,7 @@ def check_restore_broadcast(p):
     print(f"restore_broadcast p={p} ok")
 
 
-def check_reduce(p):
+def check_reduce(p, backend="jnp"):
     """Reversed-schedule reduction: root slice = op-reduction, rest zero."""
     mesh = make_mesh(p)
     rng = np.random.default_rng(17)
@@ -160,7 +165,8 @@ def check_reduce(p):
             data = rng.integers(-1000, 1000, size=(p, 41)).astype(np.int32)
             x = sharded(mesh, jnp.asarray(data))
             out = np.asarray(jax.jit(
-                lambda a: circulant_reduce(mesh, "data", a, n_blocks=n, root=root)
+                lambda a: circulant_reduce(mesh, "data", a, n_blocks=n,
+                                           root=root, backend=backend)
             )(x))
             np.testing.assert_array_equal(out[root], data.sum(axis=0))
             for r in range(p):
@@ -170,13 +176,14 @@ def check_reduce(p):
             xf = sharded(mesh, jnp.asarray(fdata))
             outf = np.asarray(jax.jit(
                 lambda a: circulant_reduce(
-                    mesh, "data", a, n_blocks=n, root=root, op="max")
+                    mesh, "data", a, n_blocks=n, root=root, op="max",
+                    backend=backend)
             )(xf))
             np.testing.assert_array_equal(outf[root], fdata.max(axis=0))
-            print(f"reduce p={p} n={n} root={root} ok")
+            print(f"reduce p={p} n={n} root={root} backend={backend} ok")
 
 
-def check_allreduce(p):
+def check_allreduce(p, backend="jnp"):
     """Composed reduce+broadcast: every rank holds the full reduction."""
     mesh = make_mesh(p)
     rng = np.random.default_rng(19)
@@ -184,7 +191,8 @@ def check_allreduce(p):
         data = rng.integers(-1000, 1000, size=(p, 53)).astype(np.int32)
         x = sharded(mesh, jnp.asarray(data))
         out = np.asarray(jax.jit(
-            lambda a: circulant_allreduce(mesh, "data", a, n_blocks=n)
+            lambda a: circulant_allreduce(mesh, "data", a, n_blocks=n,
+                                          backend=backend)
         )(x))
         expect = data.sum(axis=0)
         for r in range(p):
@@ -192,12 +200,13 @@ def check_allreduce(p):
         fdata = rng.normal(size=(p, 53)).astype(np.float32)
         xf = sharded(mesh, jnp.asarray(fdata))
         outf = np.asarray(jax.jit(
-            lambda a: circulant_allreduce(mesh, "data", a, n_blocks=n, op="max")
+            lambda a: circulant_allreduce(mesh, "data", a, n_blocks=n,
+                                          op="max", backend=backend)
         )(xf))
         expectf = fdata.max(axis=0)
         for r in range(p):
             np.testing.assert_array_equal(outf[r], expectf)
-        print(f"allreduce p={p} n={n} ok")
+        print(f"allreduce p={p} n={n} backend={backend} ok")
 
 
 def check_allbroadcast(p, elems=48):
@@ -222,7 +231,7 @@ def check_ring(p, elems=16):
     print(f"ring p={p} ok")
 
 
-def main(what, p):
+def main(what, p, backend="jnp"):
     if len(jax.devices()) < p:
         # Graceful skip (e.g. a backend that ignores the host-device
         # forcing flag): the caller maps this to pytest.skip.
@@ -230,21 +239,23 @@ def main(what, p):
         return
     if what in ("broadcast", "all"):
         for n in (1, 2, 3, 5, 8):
-            check_broadcast(p, n, root=0)
-        check_broadcast(p, 4, root=p // 2)
-        check_broadcast(p, 4, root=p - 1)
-        check_broadcast(p, 3, root=0, dtype=jnp.bfloat16)
-        check_broadcast(p, 3, root=0, dtype=jnp.int32)
+            check_broadcast(p, n, root=0, backend=backend)
+        check_broadcast(p, 4, root=p // 2, backend=backend)
+        check_broadcast(p, 4, root=p - 1, backend=backend)
+        check_broadcast(p, 3, root=0, dtype=jnp.bfloat16, backend=backend)
+        check_broadcast(p, 3, root=0, dtype=jnp.int32, backend=backend)
     if what in ("allgather", "all"):
         for n in (1, 2, 5, 8):
-            check_allgather(p, n)
-        check_allgather(p, 3, dtype=jnp.bfloat16)
+            check_allgather(p, n, backend=backend)
+        check_allgather(p, 3, dtype=jnp.bfloat16, backend=backend)
     if what in ("allgatherv", "all"):
         rng = np.random.default_rng(3)
-        check_allgatherv(p, 2, [10 * ((j % 3)) + 1 for j in range(p)])
+        check_allgatherv(p, 2, [10 * ((j % 3)) + 1 for j in range(p)],
+                         backend=backend)
         # degenerate: one rank has everything
-        check_allgatherv(p, 3, [600] + [1] * (p - 1))
-        check_allgatherv(p, 2, list(rng.integers(1, 50, size=p)))
+        check_allgatherv(p, 3, [600] + [1] * (p - 1), backend=backend)
+        check_allgatherv(p, 2, list(rng.integers(1, 50, size=p)),
+                         backend=backend)
     if what in ("ring", "all"):
         check_ring(p)
     if what in ("compressed", "all"):
@@ -254,13 +265,13 @@ def main(what, p):
     if what in ("reducescatter", "all"):
         check_reduce_scatter(p)
     if what in ("reduce", "all"):
-        check_reduce(p)
+        check_reduce(p, backend=backend)
     if what in ("allreduce", "all"):
-        check_allreduce(p)
+        check_allreduce(p, backend=backend)
     if what in ("allbroadcast", "all"):
         check_allbroadcast(p)
     print("ALL OK")
 
 
 if __name__ == "__main__":
-    main(what, p)
+    main(what, p, backend)

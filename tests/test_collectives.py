@@ -20,13 +20,13 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 WORKER = os.path.join(ROOT, "tests", "mp_worker.py")
 
 
-def run_worker(what: str, p: int):
+def run_worker(what: str, p: int, backend: str = "jnp"):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
     env["JAX_PLATFORMS"] = "cpu"
     res = subprocess.run(
-        [sys.executable, WORKER, what, str(p)],
+        [sys.executable, WORKER, what, str(p), backend],
         capture_output=True,
         text=True,
         env=env,
@@ -85,6 +85,15 @@ def test_circulant_allreduce_multidevice(p):
 @pytest.mark.parametrize("p", [3, 8])
 def test_circulant_allbroadcast_multidevice(p):
     run_worker("allbroadcast", p)
+
+
+@pytest.mark.parametrize(
+    "what", ["broadcast", "allgather", "allgatherv", "reduce", "allreduce"]
+)
+def test_collective_pallas_backend_multidevice(what):
+    """The Pallas (interpret) round-step backend inside real shard_map
+    collectives on a forced multi-device host mesh."""
+    run_worker(what, 5, backend="pallas")
 
 
 def test_reduce_scatter_reversal_property():

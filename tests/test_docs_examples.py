@@ -1,9 +1,13 @@
-"""Docs check: every ```python block in docs/*.md (and README.md) runs.
+"""Docs check: every ```python block in docs/*.md (and README.md) runs,
+and every relative markdown link resolves.
 
 Blocks within one file execute sequentially in a shared namespace, so
 later examples may build on earlier imports/variables exactly as a
 reader would run them top to bottom.  Fenced languages other than
-``python`` (bash, text, ...) are ignored.
+``python`` (bash, text, ...) are ignored.  The link checker covers
+``[text](target)`` links to repo-relative files (external URLs and
+in-page anchors are skipped), so docs cross-references cannot rot
+either.  The CI docs job runs this file standalone.
 """
 
 import os
@@ -46,6 +50,42 @@ def extract_python_blocks(path):
             elif lang is not None:
                 buf.append(line)
     return blocks
+
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _strip_fences(text):
+    """Drop fenced code blocks so code samples can't trip the link check."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.strip().startswith("```"):
+            fenced = not fenced
+            continue
+        if not fenced:
+            out.append(line)
+    return "\n".join(out)
+
+
+@pytest.mark.parametrize(
+    "path", _doc_files(), ids=lambda p: os.path.relpath(p, ROOT)
+)
+def test_docs_links_resolve(path):
+    """Every repo-relative markdown link points at an existing file."""
+    text = _strip_fences(open(path, encoding="utf-8").read())
+    base = os.path.dirname(path)
+    broken = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        target = target.split("#")[0]
+        if not target:
+            continue
+        if not os.path.exists(os.path.normpath(os.path.join(base, target))):
+            broken.append(target)
+    assert not broken, (
+        f"{os.path.relpath(path, ROOT)}: broken relative links {broken}"
+    )
 
 
 @pytest.mark.parametrize(

@@ -10,12 +10,16 @@ from _hypothesis_compat import given, settings, st
 from repro.kernels.ops import (
     gqa_flash_attention,
     mamba2_ssd,
+    schedule_acc_shuffle,
     schedule_pack,
+    schedule_shuffle,
     schedule_unpack,
 )
 from repro.kernels.ref import (
     attention_ref,
+    block_acc_shuffle_ref,
     block_pack_ref,
+    block_shuffle_ref,
     block_unpack_ref,
     ssd_ref,
 )
@@ -115,6 +119,45 @@ def test_block_pack_unpack(dtype, R, ns, bs):
         np.asarray(schedule_unpack(buf, msg, idx)),
         np.asarray(block_unpack_ref(buf, msg, idx)),
     )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("R,ns,bs", [(4, 3, 8), (8, 9, 128), (17, 6, 32)])
+def test_block_shuffle(dtype, R, ns, bs):
+    """Fused unpack+pack vs the jnp oracle, incl. the recv==send pipeline."""
+    if dtype == jnp.int32:
+        buf = jnp.asarray(RNG.integers(0, 100, size=(R, ns, bs)), dtype)
+        msg = jnp.asarray(RNG.integers(0, 100, size=(R, bs)), dtype)
+    else:
+        buf = jnp.asarray(RNG.normal(size=(R, ns, bs)), dtype)
+        msg = jnp.asarray(RNG.normal(size=(R, bs)), dtype)
+    recv = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    send = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    send = send.at[0].set(recv[0])  # forward what was just received
+    kb, km = schedule_shuffle(buf, msg, recv, send)
+    rb, rm = block_shuffle_ref(buf, msg, recv, send)
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("R,ns,bs", [(4, 3, 8), (17, 6, 32)])
+def test_block_acc_shuffle(op, dtype, R, ns, bs):
+    """Fused accumulate+capture/drain vs the jnp oracle, incl. acc==fwd."""
+    if dtype == jnp.int32:
+        buf = jnp.asarray(RNG.integers(-100, 100, size=(R, ns, bs)), dtype)
+        msg = jnp.asarray(RNG.integers(-100, 100, size=(R, bs)), dtype)
+    else:
+        buf = jnp.asarray(RNG.normal(size=(R, ns, bs)), dtype)
+        msg = jnp.asarray(RNG.normal(size=(R, bs)), dtype)
+    acc = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    fwd = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    fwd = fwd.at[0].set(acc[0])  # capped re-send: capture the fresh partial
+    kb, km = schedule_acc_shuffle(buf, msg, acc, fwd, op=op)
+    rb, rm = block_acc_shuffle_ref(buf, msg, acc, fwd, op=op)
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
 
 
 def test_block_pack_with_real_schedule():

@@ -1,0 +1,193 @@
+"""Backend conformance for the pluggable round-step data plane.
+
+Two layers, both single-process (no multidevice marker -- this is the
+schedule-stack fast lane's coverage of the Pallas path):
+
+  1. kernel-level: the fused Pallas kernels (interpret mode) agree
+     bit-exactly with the jnp reference backend on random slot plans,
+     including the equal-slot pipeline cases, across dtypes and ops;
+  2. collective-level: ``simulate_*`` with ``backend=`` executes the
+     real round-step data plane over all p ranks and asserts bit-exact
+     agreement with the message-passing NumPy reference, over the
+     engine-test edge cases (p = 1, powers of two, odd p) for sum/max
+     on int and float dtypes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.roundstep import (
+    dataplane_allgather,
+    dataplane_broadcast,
+    dataplane_reduce,
+    get_round_step,
+)
+from repro.core.simulator import (
+    simulate_allbroadcast,
+    simulate_allreduce,
+    simulate_broadcast,
+    simulate_reduce,
+)
+
+RNG = np.random.default_rng(7)
+
+# The p=1 / power-of-two / odd edge cases of tests/test_engine.py.
+EDGE_PS = [1, 2, 3, 4, 5, 8, 11, 16, 32, 36]
+BACKENDS = ["jnp", "pallas"]
+
+
+def _rand(shape, dtype):
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        return np.asarray(RNG.integers(-100, 100, size=shape), dtype)
+    return np.asarray(RNG.normal(size=shape), dtype)
+
+
+# ------------------------------------------------------- kernel level
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("R,ns,bs", [(1, 4, 8), (8, 6, 16), (17, 9, 4)])
+def test_shuffle_backends_bitexact(dtype, R, ns, bs):
+    buf = jnp.asarray(_rand((R, ns, bs), dtype))
+    msg = jnp.asarray(_rand((R, bs), dtype))
+    recv = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    send = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    # force the pipeline case (send what was just received) on row 0
+    send = send.at[0].set(recv[0])
+    jstep, pstep = get_round_step("jnp"), get_round_step("pallas")
+    jb, jm = jstep.shuffle(buf, msg, recv, send)
+    pb, pm = pstep.shuffle(buf, msg, recv, send)
+    np.testing.assert_array_equal(np.asarray(jb), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(jm), np.asarray(pm))
+    # pack/unpack primitives agree too
+    np.testing.assert_array_equal(
+        np.asarray(jstep.pack(buf, send)), np.asarray(pstep.pack(buf, send))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jstep.unpack(buf, msg, recv)),
+        np.asarray(pstep.unpack(buf, msg, recv)),
+    )
+
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("R,ns,bs", [(1, 4, 8), (8, 6, 16)])
+def test_acc_shuffle_backends_bitexact(op, dtype, R, ns, bs):
+    buf = jnp.asarray(_rand((R, ns, bs), dtype))
+    msg = jnp.asarray(_rand((R, bs), dtype))
+    acc = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    fwd = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    # force the clamped same-slot case (capture the just-accumulated
+    # partial, then drain it) on row 0
+    fwd = fwd.at[0].set(acc[0])
+    jstep, pstep = get_round_step("jnp"), get_round_step("pallas")
+    jb, jm = jstep.acc_shuffle(buf, msg, acc, fwd, op=op)
+    pb, pm = pstep.acc_shuffle(buf, msg, acc, fwd, op=op)
+    np.testing.assert_array_equal(np.asarray(jb), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(jm), np.asarray(pm))
+
+
+def test_acc_shuffle_semantics():
+    """The fused step implements accumulate -> capture -> drain."""
+    buf = jnp.asarray(np.arange(2 * 3 * 2, dtype=np.int32).reshape(2, 3, 2))
+    msg = jnp.asarray(np.full((2, 2), 10, np.int32))
+    acc = jnp.asarray([0, 1], jnp.int32)
+    fwd = jnp.asarray([0, 2], jnp.int32)
+    for backend in BACKENDS:
+        nb, out = get_round_step(backend).acc_shuffle(buf, msg, acc, fwd)
+        nb, out = np.asarray(nb), np.asarray(out)
+        # row 0: acc == fwd -> capture sees the accumulated value, slot drained
+        assert np.array_equal(out[0], [0 + 10, 1 + 10])
+        assert np.array_equal(nb[0, 0], [0, 0])
+        # row 1: accumulate into slot 1, capture+drain slot 2
+        assert np.array_equal(nb[1, 1], [8 + 10, 9 + 10])
+        assert np.array_equal(out[1], [10, 11])
+        assert np.array_equal(nb[1, 2], [0, 0])
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="backend"):
+        get_round_step("cuda")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_unknown_op_raises(backend):
+    """Both backends validate the reduction op instead of silently
+    falling back (shared registry: repro.kernels.reduce_ops)."""
+    buf = jnp.zeros((2, 3, 4), jnp.float32)
+    msg = jnp.zeros((2, 4), jnp.float32)
+    idx = jnp.zeros((2,), jnp.int32)
+    with pytest.raises(ValueError, match="reduction op"):
+        get_round_step(backend).acc_shuffle(buf, msg, idx, idx, op="min")
+
+
+# --------------------------------------------------- collective level
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("p", EDGE_PS)
+def test_simulate_broadcast_certifies_backend(backend, p):
+    for n in (1, 3, 5):
+        for root in sorted({0, p - 1}):
+            res = simulate_broadcast(p, n, root=root, backend=backend)
+            assert res.rounds == res.optimal_rounds
+            assert res.backend == backend
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("p", EDGE_PS)
+def test_simulate_reduce_certifies_backend(backend, p):
+    """Bit-exact sum/max on int64 and float64 values, every edge p."""
+    rng = np.random.default_rng(p)
+    for n in (1, 4):
+        ivals = rng.integers(-(1 << 31), 1 << 31, size=(p, n)).astype(np.int64)
+        fvals = rng.normal(size=(p, n))
+        for op, vals in [("+", ivals), ("+", fvals),
+                         ("max", ivals), ("max", fvals)]:
+            res = simulate_reduce(p, n, root=p - 1, op=op, values=vals,
+                                  backend=backend)
+            assert res.rounds == res.optimal_rounds
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("p", [1, 2, 4, 5, 8, 16])
+def test_simulate_allreduce_certifies_backend(backend, p):
+    rng = np.random.default_rng(p * 3 + 1)
+    for n in (1, 4):
+        vals = rng.normal(size=(p, n))
+        res = simulate_allreduce(p, n, values=vals, backend=backend)
+        assert res.rounds == res.optimal_rounds
+        ivals = rng.integers(-(1 << 31), 1 << 31, size=(p, n)).astype(np.int64)
+        simulate_allreduce(p, n, values=ivals, op="max", backend=backend)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("p", [1, 2, 4, 8, 11])
+def test_simulate_allbroadcast_certifies_backend(backend, p):
+    for n in (1, 3):
+        res = simulate_allbroadcast(p, n, backend=backend)
+        assert res.rounds == res.optimal_rounds
+
+
+# --------------------------------------- data planes agree across backends
+
+
+@pytest.mark.parametrize("p", [2, 8, 13])
+def test_dataplanes_bitexact_across_backends(p):
+    """Beyond certifying each backend against the reference: the two
+    backends produce identical buffers on identical inputs (float sums
+    included -- same accumulation order)."""
+    rng = np.random.default_rng(p)
+    n = 4
+    bvals = rng.normal(size=(n,))
+    assert np.array_equal(dataplane_broadcast(p, n, 0, bvals, "jnp"),
+                          dataplane_broadcast(p, n, 0, bvals, "pallas"))
+    gvals = rng.normal(size=(p, n))
+    assert np.array_equal(dataplane_allgather(p, n, gvals, "jnp"),
+                          dataplane_allgather(p, n, gvals, "pallas"))
+    for op in ("sum", "max"):
+        assert np.array_equal(
+            dataplane_reduce(p, n, p - 1, gvals, op, "jnp"),
+            dataplane_reduce(p, n, p - 1, gvals, op, "pallas"),
+        )

@@ -1,6 +1,13 @@
 """End-to-end simulation tests for the collective family: broadcast /
 all-broadcast (forward schedules) and reduction / all-reduction (reversed
-schedules), payload-checked delivery in exactly the optimal round counts."""
+schedules), payload-checked delivery in exactly the optimal round counts.
+
+The broadcast / reduce / allreduce grids are parametrized over the
+round-step data-plane backend: ``"jnp"`` / ``"pallas"`` run the
+message-passing reference AND the real data plane (Pallas in interpret
+mode on CPU), asserting bit-exact agreement -- the certification
+required by docs/kernels.md.  (A ``backend=None`` lane would be a
+strict subset of the ``"jnp"`` run, so it is deliberately absent.)"""
 
 import numpy as np
 import pytest
@@ -18,23 +25,26 @@ from repro.core.simulator import (
 # The reversed-family acceptance grid: every (p, n, root) combination.
 FAMILY_PS = [1, 2, 3, 5, 8, 11, 36, 64]
 FAMILY_NS = [1, 2, 4, 7]
+BACKENDS = ["jnp", "pallas"]
 
 
 def _roots(p):
     return sorted({0, 1 % p, p - 1})
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("p", [1, 2, 3, 4, 5, 7, 8, 16, 17, 31, 33, 100])
 @pytest.mark.parametrize("n", [1, 2, 3, 7, 11])
-def test_broadcast_delivers_optimal_rounds(p, n):
-    res = simulate_broadcast(p, n)
+def test_broadcast_delivers_optimal_rounds(p, n, backend):
+    res = simulate_broadcast(p, n, backend=backend)
     assert res.rounds == res.optimal_rounds
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("p", [5, 17, 33])
 @pytest.mark.parametrize("root", [0, 1, 3, 4])
-def test_broadcast_nonzero_root(p, root):
-    res = simulate_broadcast(p, 6, root=root)
+def test_broadcast_nonzero_root(p, root, backend):
+    res = simulate_broadcast(p, 6, root=root, backend=backend)
     assert res.rounds == res.optimal_rounds
 
 
@@ -67,35 +77,40 @@ def test_broadcast_volume_is_optimal():
 # ------------------------------------------- reversed-schedule family
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("p", FAMILY_PS)
 @pytest.mark.parametrize("n", FAMILY_NS)
-def test_reduce_round_optimal_and_bitexact(p, n):
+def test_reduce_round_optimal_and_bitexact(p, n, backend):
     """Reduction completes in exactly n-1+q rounds for every root and the
-    result matches the NumPy reference reduction bit-exactly."""
+    result matches the NumPy reference reduction bit-exactly (the jnp and
+    pallas data planes are certified against the same reference)."""
     rng = np.random.default_rng(p * 100 + n)
     for root in _roots(p):
         vals = rng.integers(-(1 << 31), 1 << 31, size=(p, n)).astype(np.int64)
-        res = simulate_reduce(p, n, root=root, values=vals)
+        res = simulate_reduce(p, n, root=root, values=vals, backend=backend)
         assert res.rounds == res.optimal_rounds == num_rounds(p, n)
         got = np.array([res.buffers[root][j] for j in range(n)])
         assert np.array_equal(got, vals.sum(axis=0))
 
         fvals = rng.normal(size=(p, n))
-        resm = simulate_reduce(p, n, root=root, op="max", values=fvals)
+        resm = simulate_reduce(p, n, root=root, op="max", values=fvals,
+                               backend=backend)
         assert resm.rounds == resm.optimal_rounds == num_rounds(p, n)
         gotm = np.array([resm.buffers[root][j] for j in range(n)])
         assert np.array_equal(gotm, fvals.max(axis=0))
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("p", FAMILY_PS)
 @pytest.mark.parametrize("n", FAMILY_NS)
-def test_allreduce_round_optimal_and_bitexact(p, n):
+def test_allreduce_round_optimal_and_bitexact(p, n, backend):
     """All-reduction completes in exactly 2(n-1)+2*ceil(log2 p) rounds for
-    every root and delivers the bit-exact reduction to EVERY rank."""
+    every root and delivers the bit-exact reduction to EVERY rank; the
+    jnp/pallas data planes of both phases are certified on the grid."""
     rng = np.random.default_rng(p * 1000 + n)
     for root in _roots(p):
         vals = rng.integers(-(1 << 31), 1 << 31, size=(p, n)).astype(np.int64)
-        res = simulate_allreduce(p, n, root=root, values=vals)
+        res = simulate_allreduce(p, n, root=root, values=vals, backend=backend)
         predicted = 0 if p == 1 else 2 * (n - 1) + 2 * ceil_log2(p)
         assert res.rounds == res.optimal_rounds == predicted
         expect = vals.sum(axis=0)
@@ -104,7 +119,8 @@ def test_allreduce_round_optimal_and_bitexact(p, n):
             assert np.array_equal(got, expect), (p, n, root, r)
 
         fvals = rng.normal(size=(p, n))
-        resm = simulate_allreduce(p, n, root=root, op="max", values=fvals)
+        resm = simulate_allreduce(p, n, root=root, op="max", values=fvals,
+                                  backend=backend)
         assert resm.rounds == resm.optimal_rounds == predicted
         expectm = fvals.max(axis=0)
         for r in range(p):
