@@ -1,0 +1,188 @@
+"""Communicator benchmark: plan-once/execute-many vs per-call dispatch.
+
+    PYTHONPATH=src python -m benchmarks.run comm
+
+Measures the api_redesign's central claim -- plan construction is a
+one-time host cost fully decoupled from execution -- and writes the
+machine-readable perf trajectory to ``BENCH_comm.json`` at the repo
+root (committed, so the numbers version with the code).
+
+Committed JSON schema (``schema: 1``; times are medians over iters):
+
+    {
+      "schema": 1,
+      "host": {                       # no devices needed
+        "p": ..., "n": ...,
+        "plan_cold_ms": ...,          # first host_plan: bundle + slot tables
+        "plan_cached_us": ...,        # cached host_plan lookup
+        "slotplan_cached_us": ...     # cached slot-table lookup
+      },
+      "device": [                     # subprocess, forced host devices
+        {"kind": ..., "p": ..., "m_bytes": ..., "n_blocks": ...,
+         "plan_us": ...,              # cached CollectivePlan.__call__
+         "shim_us": ...,              # circulant_* shim (plan-cache lookup)
+         "percall_ms": ...,           # legacy dispatch: plan rebuilt+retraced
+         "speedup_plan_vs_percall": ...},
+        ...
+      ]
+    }
+
+``plan_us`` is the steady-state cost the plan/execute API pays per
+call; ``percall_ms`` clears the plan cache before every call, which is
+what each pre-communicator ``circulant_*`` invocation effectively did
+(fresh closure -> slot-table rederivation + shard_map retrace +
+recompile).  ``shim_us`` shows the shims riding the same plan cache.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(ROOT, "BENCH_comm.json")
+
+HOST_P, HOST_N = 1024, 64
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def host_rows(p: int = HOST_P, n: int = HOST_N):
+    """Plan construction vs cached lookup, host-side only."""
+    from repro.core.comm import host_plan
+    from repro.core.engine import (
+        bundle_cache_clear,
+        get_bundle,
+        plan_cache_clear,
+    )
+    from repro.core.roundstep import broadcast_slot_plan
+
+    bundle_cache_clear()
+    plan_cache_clear()
+    t0 = time.perf_counter()
+    host_plan("broadcast", p, n)
+    plan_cold_ms = (time.perf_counter() - t0) * 1e3
+
+    iters = 2000
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        host_plan("broadcast", p, n)
+    plan_cached_us = (time.perf_counter() - t0) / iters * 1e6
+
+    bundle = get_bundle(p)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        broadcast_slot_plan(bundle, n)
+    slotplan_cached_us = (time.perf_counter() - t0) / iters * 1e6
+
+    return {
+        "p": p,
+        "n": n,
+        "plan_cold_ms": round(plan_cold_ms, 3),
+        "plan_cached_us": round(plan_cached_us, 2),
+        "slotplan_cached_us": round(slotplan_cached_us, 2),
+    }
+
+
+_DEVICE_CODE = r"""
+import json, time, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.comm import get_comm
+from repro.core.collectives import circulant_allreduce, circulant_broadcast
+from repro.core.engine import plan_cache_clear
+
+def median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+p = len(jax.devices())
+mesh = Mesh(np.array(jax.devices()), ("data",))
+comm = get_comm(mesh, "data")
+rows = []
+CASES = [
+    ("broadcast", 65536), ("broadcast", 1048576),
+    ("allreduce", 65536),
+]
+for kind, m in CASES:
+    n = 8
+    elems = m // 4
+    x = jax.device_put(jnp.zeros((p, elems), jnp.float32),
+                       NamedSharding(mesh, P("data")))
+    plan = comm.plan(kind, x, n_blocks=n)   # hoisted: plan once ...
+    shim = circulant_broadcast if kind == "broadcast" else circulant_allreduce
+    shim_fn = lambda a: shim(mesh, "data", a, n_blocks=n)
+    jax.block_until_ready(plan(x))  # compile once
+    ts = []
+    for _ in range(30):
+        t0 = time.perf_counter()
+        jax.block_until_ready(plan(x))      # ... execute many
+        ts.append(time.perf_counter() - t0)
+    plan_us = median(ts) * 1e6
+    jax.block_until_ready(shim_fn(x))
+    ts = []
+    for _ in range(30):
+        t0 = time.perf_counter()
+        jax.block_until_ready(shim_fn(x))
+        ts.append(time.perf_counter() - t0)
+    shim_us = median(ts) * 1e6
+    ts = []
+    for _ in range(3):  # legacy per-call dispatch: rebuild + retrace + compile
+        plan_cache_clear()
+        t0 = time.perf_counter()
+        jax.block_until_ready(shim_fn(x))
+        ts.append(time.perf_counter() - t0)
+    percall_ms = median(ts) * 1e3
+    rows.append({
+        "kind": kind, "p": p, "m_bytes": m, "n_blocks": n,
+        "plan_us": round(plan_us, 1), "shim_us": round(shim_us, 1),
+        "percall_ms": round(percall_ms, 2),
+        "speedup_plan_vs_percall": round(percall_ms * 1e3 / plan_us, 1),
+    })
+print("JSON" + json.dumps(rows))
+"""
+
+
+def device_rows(p: int = 8):
+    """Run the on-device comparison in a subprocess with p host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run([sys.executable, "-c", _DEVICE_CODE], env=env,
+                         capture_output=True, text=True, timeout=900)
+    if res.returncode != 0:
+        raise RuntimeError(res.stderr[-2000:])
+    for line in res.stdout.splitlines():
+        if line.startswith("JSON"):
+            return json.loads(line[4:])
+    raise RuntimeError("device benchmark produced no JSON row")
+
+
+def main(write_json: bool = True):
+    host = host_rows()
+    print("name,p,n,plan_cold_ms,plan_cached_us,slotplan_cached_us")
+    print(f"comm_host,{host['p']},{host['n']},{host['plan_cold_ms']},"
+          f"{host['plan_cached_us']},{host['slotplan_cached_us']}")
+    device = device_rows()
+    print("name,kind,p,m_bytes,n_blocks,plan_us,shim_us,percall_ms,speedup")
+    for r in device:
+        print(f"comm_device,{r['kind']},{r['p']},{r['m_bytes']},"
+              f"{r['n_blocks']},{r['plan_us']},{r['shim_us']},"
+              f"{r['percall_ms']},{r['speedup_plan_vs_percall']}")
+    if write_json:
+        payload = {"schema": 1, "host": host, "device": device}
+        with open(OUT_PATH, "w", encoding="utf-8") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {os.path.relpath(OUT_PATH, ROOT)}")
+
+
+if __name__ == "__main__":
+    main()

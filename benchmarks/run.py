@@ -46,6 +46,12 @@ def main() -> None:
 
         allreduce_bench.main()
 
+    if which in ("comm", "all"):
+        print("# === Communicator: plan-cached vs per-call dispatch ===")
+        from benchmarks import comm_bench
+
+        comm_bench.main()
+
     if which in ("roundstep", "all"):
         print("# === Round-step data plane: jnp vs pallas backends ===")
         from benchmarks import allreduce_bench, bcast_bench

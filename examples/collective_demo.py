@@ -1,12 +1,15 @@
-"""Circulant collectives on real (host) devices.
+"""Circulant collectives on real (host) devices via the communicator API.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/collective_demo.py
 
-Runs the paper's n-block broadcast and irregular allgather as JAX
-collectives (shard_map + lax.ppermute rounds driven by the O(log p)
-schedules) over 8 devices, checks results, and prints the per-round
-communication plan for one rank.
+Runs the paper's n-block broadcast, an all-reduction, and the irregular
+allgather as JAX collectives through the plan/execute front-end
+(:mod:`repro.core.comm`): one `CirculantComm` per mesh axis, one
+`CollectivePlan` per (kind, payload spec) precomputing the O(log p)
+schedule work host-side, and plan calls that run only the traced
+ppermute rounds.  Also broadcasts a mixed-dtype pytree in one shared
+schedule and prints the per-round communication plan for one rank.
 """
 
 import os
@@ -22,13 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.collectives import circulant_allgatherv, circulant_broadcast
+from repro.core.comm import get_comm
 from repro.core.engine import get_bundle
 
 
 def main():
     p = len(jax.devices())
     mesh = Mesh(np.array(jax.devices()), ("data",))
+    comm = get_comm(mesh, "data")
     print(f"devices: {p}")
 
     # ---- the communication plan of rank 1 for a 5-block broadcast
@@ -46,13 +50,41 @@ def main():
         print(f"  round {rnd}: recv block {rb if rb>=0 else '--'} from {frm}, "
               f"send block {sb if sb>=0 else '--'} to {to}")
 
-    # ---- run it
+    # ---- plan once, execute many
     rng = np.random.default_rng(0)
     data = rng.normal(size=(p, 1000)).astype(np.float32)
     xs = jax.device_put(jnp.asarray(data), NamedSharding(mesh, P("data")))
-    out = jax.jit(lambda a: circulant_broadcast(mesh, "data", a, n_blocks=n))(xs)
+    plan = comm.plan("broadcast", xs, n_blocks=n)
+    print(f"\nplan: {plan.describe()}")
+    out = plan(xs)                      # first call compiles
+    out = plan(xs)                      # later calls only dispatch
     assert np.allclose(np.asarray(out), data[0]), "broadcast mismatch"
-    print("\ncirculant_broadcast: every rank holds root's data  OK")
+    assert plan is comm.plan("broadcast", xs, n_blocks=n), "plan cache miss"
+    print("CollectivePlan broadcast: every rank holds root's data  OK")
+
+    # ---- pytree payload: mixed dtypes, ragged leaves, ONE shared schedule
+    state = {
+        "w": jax.device_put(jnp.asarray(rng.normal(size=(p, 37, 3)),
+                                        jnp.float32),
+                            NamedSharding(mesh, P("data"))),
+        "step": jax.device_put(jnp.asarray(
+            rng.integers(0, 100, size=(p, 11)), jnp.int32),
+            NamedSharding(mesh, P("data"))),
+    }
+    tree_out = comm.broadcast(state, n_blocks=4, root=p - 1)
+    for key, leaf in tree_out.items():
+        ref = np.asarray(state[key])[p - 1]
+        assert np.array_equal(np.asarray(leaf), np.broadcast_to(ref, leaf.shape))
+    print("pytree broadcast (float32 + int32 leaves, one schedule)  OK")
+
+    # ---- all-reduction on the same communicator
+    vals = rng.integers(-100, 100, size=(p, 257)).astype(np.int32)
+    red = comm.allreduce(
+        jax.device_put(jnp.asarray(vals), NamedSharding(mesh, P("data"))),
+        n_blocks=3)
+    assert np.array_equal(np.asarray(red),
+                          np.broadcast_to(vals.sum(0), vals.shape))
+    print("circulant allreduce: every rank holds the sum  OK")
 
     # ---- irregular allgather, degenerate sizes (paper Figure 2's hard case)
     sizes = [900] + [20] * (p - 1)
@@ -60,12 +92,10 @@ def main():
     for j in range(p):
         rows[j, : sizes[j]] = rng.normal(size=sizes[j])
     xs = jax.device_put(jnp.asarray(rows), NamedSharding(mesh, P("data")))
-    out = np.asarray(jax.jit(
-        lambda a: circulant_allgatherv(mesh, "data", a, sizes, n_blocks=3)
-    )(xs))
+    out = np.asarray(comm.allgatherv(xs, sizes, n_blocks=3))
     for j in range(p):
         assert np.allclose(out[j, : sizes[j]], rows[j, : sizes[j]])
-    print("circulant_allgatherv (degenerate sizes): all rows delivered  OK")
+    print("circulant allgatherv (degenerate sizes): all rows delivered  OK")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,9 @@
 4. simulates the n-block broadcast (Algorithm 1): n-1+ceil(log2 p)
    rounds, payload-checked,
 5. simulates the all-to-all broadcast (Algorithm 2),
-6. prints the Table-2-style schedule for small p.
+6. prints the Table-2-style schedule for small p,
+7. plans and executes a real JAX collective through the communicator
+   API (:mod:`repro.core.comm`) on however many devices exist.
 """
 
 import sys
@@ -48,6 +50,26 @@ def main():
     res = simulate_allgather(p, max(1, n // 2))
     print(f"allgather  p={p} n={max(1, n//2)}: delivered in {res.rounds} rounds "
           f"(optimal), {res.blocks_moved} block transfers")
+
+    # ---- the communicator API on real devices (p = however many exist):
+    # plan once (bundle + slot tables + jit executor), execute many.
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import get_comm
+
+    pdev = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    comm = get_comm(mesh, "data")
+    state = {"w": jnp.ones((pdev, 8), jnp.float32),
+             "step": jnp.zeros((pdev, 3), jnp.int32)}
+    plan = comm.plan("broadcast", state, n_blocks=2)
+    out = plan(state)                       # only the traced rounds run
+    assert plan is comm.plan("broadcast", state, n_blocks=2)
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(state["w"]))
+    print(f"\ncomm plan/execute on {pdev} device(s): {plan.describe()}")
     print("\nOK")
 
 

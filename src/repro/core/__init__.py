@@ -3,7 +3,9 @@ plus the reversed-schedule collective family (reduction / all-reduction /
 all-broadcast, arXiv:2407.18004) on the same cached engine.
 
 Public API (see docs/api.md for the full reference):
-    get_bundle, ScheduleBundle (the cached schedule engine -- preferred)
+    CirculantComm, CollectivePlan, get_comm (plan/execute communicator
+    front-end with pytree payloads -- the preferred collective API)
+    get_bundle, ScheduleBundle (the cached schedule engine)
     RoundStep, get_round_step (the pluggable per-round data plane)
     compute_skips, baseblock, recv_schedule, send_schedule, schedule_tables
     verify_schedules, verify_reversed_schedules, verify_bundle
@@ -12,6 +14,7 @@ Public API (see docs/api.md for the full reference):
     to certify the round-step data plane bit-exactly)
 """
 
+from .comm import CirculantComm, CollectivePlan, get_comm, payload_spec
 from .engine import ScheduleBundle, get_bundle
 from .roundstep import RoundStep, get_round_step
 from .schedule import (
@@ -40,6 +43,10 @@ from .verify import (
 )
 
 __all__ = [
+    "CirculantComm",
+    "CollectivePlan",
+    "get_comm",
+    "payload_spec",
     "ScheduleBundle",
     "get_bundle",
     "RoundStep",

@@ -1,65 +1,52 @@
-"""JAX circulant-graph collectives driven by the paper's schedules.
+"""Legacy per-call entry points for the circulant collective family.
 
-TPU-native adaptation of Algorithm 1 (broadcast) and Algorithm 2
-(all-to-all broadcast / allgatherv): each communication round
-``Send(t^k) || Recv(f^k)`` on the circulant graph is one
-``jax.lax.ppermute`` with the static rotation ``r -> (r + skip[k]) % p``.
-The per-rank receive/send block indices come from the O(log p) schedule
-algorithms via the cached engine bundle (:mod:`repro.core.engine`):
-small [p, q] integer tables (total host cost O(p log p), i.e. O(log p)
-per participating device, paid once per process for each (p, root))
-looked up with the device's own ``axis_index`` at run time, so the
-traced program is identical on every device (SPMD).
+.. deprecated::
+    These six ``circulant_*`` functions are compatibility shims over the
+    plan/execute communicator API of :mod:`repro.core.comm` -- prefer
 
-Hardware adaptation notes (see DESIGN.md):
-  * the paper's one-ported bidirectional model maps to one ppermute per
-    round: every chip sends and receives exactly one block per round;
-  * skips are arbitrary rotations; on a TPU torus a rotation by s costs
-    multiple ICI hops, so the roofline collective term counts the
-    *bytes x rounds* while the latency term counts rounds (the paper's
-    metric).  On pod-interconnect/DCN (where broadcast/allgatherv of
-    checkpoints and irregular activations actually happen) rotations are
-    switch-routed and the paper's model applies directly.
+        comm = get_comm(mesh, axis_name, backend=..., model=...)
+        plan = comm.plan(kind, payload_spec, n_blocks=..., root=..., op=...)
+        out = plan(payload)       # or comm.broadcast(x, ...) etc.
 
-Negative block indices ("neither sent nor received") are realized with a
-garbage slot: buffers carry n+1 block slots, index n is scratch.  By
-Correctness Condition 1 the sender's block index is negative exactly when
-the receiver's is, so both sides address the garbage slot in the same
-round and no masking is needed.  Indices > n-1 are capped to n-1 (final
-phase), exactly as in the paper.
+    which pulls plan construction (bundle lookup, clamped per-round slot
+    tables, round plan, round-step selection, jit executor) out of the
+    hot path and generalizes payloads to arbitrary pytrees.  The shims
+    resolve the process-cached communicator and plan on every call, so
+    they share the compiled executors with first-class plan users -- no
+    caller breaks, but each call pays a plan-cache lookup the plan API
+    does not.
 
-Data plane: the per-round pack/exchange/unpack-or-accumulate step runs
-through the pluggable :class:`repro.core.roundstep.RoundStep` backend --
-``backend="jnp"`` (default, pure-jnp gathers/scatters, lowers anywhere)
-or ``backend="pallas"`` (fused scalar-prefetch kernels, the TPU fast
-path; interpret-mode on CPU).  Slot selection is precomputed host-side
-from the engine's per-round tables, so the traced per-round work is one
-``ppermute`` plus one backend call.  Both backends are bit-exact against
-each other and against the simulator reference (see docs/kernels.md).
+Semantics (unchanged from the original implementations): each
+communication round ``Send(t^k) || Recv(f^k)`` on the circulant graph is
+one ``jax.lax.ppermute`` with the static rotation ``r -> (r+skip[k]) %
+p``; per-rank slot selection comes from the cached engine bundle's
+clamped per-round tables; the per-round pack/exchange/unpack-or-
+accumulate step runs through the pluggable
+:class:`repro.core.roundstep.RoundStep` backend (``"jnp"`` default,
+``"pallas"`` fused kernels).  Round counts are the paper's optima:
+``n-1+ceil(log2 p)`` for the forward/reversed single collectives,
+``2(n-1)+2*ceil(log2 p)`` for the composed all-reduction.  See
+docs/comm.md for the migration table and docs/collectives.md for the
+schedule construction.
+
+The seed-era ``CirculantTables`` / ``build_tables`` aliases are kept but
+now emit a real :class:`DeprecationWarning` pointing at
+:func:`repro.core.engine.get_bundle`.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import warnings
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from .costmodel import (
-    CommModel,
-    optimal_num_blocks_allgather,
-    optimal_num_blocks_bcast,
-    optimal_num_blocks_reduce,
-)
+from .comm import _rot_perm, get_comm
+from .costmodel import DEFAULT_MODEL, CommModel
 from .engine import ScheduleBundle, get_bundle
 from .jaxcompat import shard_map as _shard_map
-from .roundstep import (
-    broadcast_slot_plan,
-    get_round_step,
-    reduce_slot_plan,
-)
 
 __all__ = [
     "circulant_broadcast",
@@ -74,37 +61,31 @@ __all__ = [
 ]
 
 
-# Seed-compat names: the schedule constants now live in the cached
-# engine bundle (root relabeling, batched tables, round plans included).
-# Both old entry points -- CirculantTables(p) and build_tables(p) --
-# resolve to the cached bundle.
 def CirculantTables(p: int) -> ScheduleBundle:  # noqa: N802 - legacy class name
     """Deprecated alias for :func:`repro.core.engine.get_bundle`."""
+    warnings.warn(
+        "CirculantTables(p) is deprecated; use repro.core.engine."
+        "get_bundle(p, root=0) (same cached ScheduleBundle, rooted tables "
+        "included)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return get_bundle(p)
 
 
 def build_tables(p: int) -> ScheduleBundle:
     """Deprecated alias for :func:`repro.core.engine.get_bundle`."""
+    warnings.warn(
+        "build_tables(p) is deprecated; use repro.core.engine."
+        "get_bundle(p, root=0) (same cached ScheduleBundle, rooted tables "
+        "included)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return get_bundle(p)
 
 
-def _rot_perm(p: int, s: int):
-    """Static ppermute pairs for the rotation r -> (r + s) % p."""
-    return [(r, (r + s) % p) for r in range(p)]
-
-
-def _split_blocks(flat: jnp.ndarray, n: int):
-    """Split a flat vector into n padded blocks + 1 garbage slot: [n+1, B]."""
-    size = flat.shape[0]
-    bs = -(-size // n)  # ceil
-    pad = n * bs - size
-    flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(n, bs)
-    garbage = jnp.zeros((1, bs), flat.dtype)
-    return jnp.concatenate([blocks, garbage], axis=0), bs, pad
-
-
-# --------------------------------------------------------------- broadcast
+# ------------------------------------------------------------------- shims
 
 
 def circulant_broadcast(
@@ -115,7 +96,7 @@ def circulant_broadcast(
     n_blocks: Optional[int] = None,
     root: int = 0,
     backend: str = "jnp",
-    model: CommModel = CommModel(),
+    model: CommModel = DEFAULT_MODEL,
 ):
     """Round-optimal n-block broadcast of ``x[root]`` along a mesh axis.
 
@@ -124,62 +105,11 @@ def circulant_broadcast(
     an array of the same spec where every slice equals ``x[root]``.
     Runs in n-1+ceil(log2 p) ppermute rounds (Algorithm 1) -- the
     paper's lower bound for n-block broadcast in the one-ported
-    bidirectional model, so the round count is optimal.
-
-    ``backend`` selects the per-round data plane ("jnp" or "pallas"),
-    see :mod:`repro.core.roundstep`; per-round buffer slots are
-    precomputed host-side from the engine's per-round tables, so every
-    traced round is one ppermute plus one fused round-step call.
+    bidirectional model.  Shim over
+    :meth:`repro.core.comm.CirculantComm.broadcast`.
     """
-    p = mesh.shape[axis_name]
-    if p == 1:
-        return x
-    # Rooted bundle: rows are indexed by real rank, relabeling done once
-    # in the engine (no per-call-site modulo arithmetic).
-    bundle = get_bundle(p, root)
-    per = x.shape[0] // p if x.shape[0] % p == 0 else None
-    if per != 1:
-        raise ValueError("x must have leading axis == axis size (one slice/rank)")
-    elems = int(np.prod(x.shape[1:]))
-    n = n_blocks or max(1, optimal_num_blocks_bcast(p, elems * x.dtype.itemsize, model))
-    n = min(n, max(1, elems))
-    recv_slots, send_slots, ks = broadcast_slot_plan(bundle, n)
-    step = get_round_step(backend)
-    R = len(ks)
-
-    def body(xs):
-        r = jax.lax.axis_index(axis_name)
-        flat = xs.reshape(-1)
-        buf, bs, pad = _split_blocks(flat, n)
-        buf = jnp.where(r == root, buf, jnp.zeros_like(buf))[None]  # [1, n+1, bs]
-        recv_t = jnp.asarray(recv_slots)  # [R, p] static slot tables
-        send_t = jnp.asarray(send_slots)
-        msg = step.pack(buf, send_t[0, r][None])
-        for t in range(R):
-            got = jax.lax.ppermute(
-                msg, axis_name, _rot_perm(p, bundle.skip[int(ks[t])])
-            )
-            if t + 1 < R:
-                buf, msg = step.shuffle(
-                    buf, got, recv_t[t, r][None], send_t[t + 1, r][None]
-                )
-            else:
-                buf = step.unpack(buf, got, recv_t[t, r][None])
-        out = buf[0, :n].reshape(-1)[: flat.shape[0]]
-        return out.reshape(xs.shape)
-
-    shard = _shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis_name),
-        out_specs=P(axis_name),
-        # jax has no replication rule for pallas_call inside shard_map.
-        check_vma=(backend == "jnp"),
-    )
-    return shard(x)
-
-
-# --------------------------------------------------------------- allgather
+    return get_comm(mesh, axis_name, backend=backend, model=model).broadcast(
+        x, n_blocks=n_blocks, root=root)
 
 
 def circulant_allgather(
@@ -189,71 +119,18 @@ def circulant_allgather(
     *,
     n_blocks: Optional[int] = None,
     backend: str = "jnp",
-    model: CommModel = CommModel(),
+    model: CommModel = DEFAULT_MODEL,
 ):
     """All-to-all broadcast (regular allgather) along a mesh axis.
 
     ``x``: global array sharded on its leading dim over ``axis_name``.
     Returns the fully replicated gathered array (same global shape,
-    spec ()) in the optimal n-1+ceil(log2 p) rounds.  This is
-    Algorithm 2 with equal-size contributions; the per-round message
-    packs one block per root (p-1 useful + 1 garbage row kept for a
-    uniform [p, B] layout).  ``backend`` selects the per-round data
-    plane as in :func:`circulant_broadcast` -- here the p root rows map
-    onto the batched round-step kernel rows directly.
+    spec ()) in the optimal n-1+ceil(log2 p) rounds (Algorithm 2 with
+    equal contributions).  Shim over
+    :meth:`repro.core.comm.CirculantComm.allgather`.
     """
-    p = mesh.shape[axis_name]
-    if p == 1:
-        return x
-    bundle = get_bundle(p)
-    if x.shape[0] % p != 0:
-        raise ValueError(f"leading dim {x.shape[0]} not divisible by axis size {p}")
-    shard_elems = int(np.prod(x.shape[1:])) * (x.shape[0] // p)
-    nbytes = shard_elems * x.dtype.itemsize * p
-    n = n_blocks or max(1, optimal_num_blocks_allgather(p, nbytes, model))
-    n = min(n, max(1, shard_elems))
-    # One clamped [R, p] slot table serves recv AND send: by Condition 2
-    # the send slot of root row j is the recv slot of the shifted
-    # virtual rank, so both are gathers of the same table.
-    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
-    step = get_round_step(backend)
-    R = len(ks)
-    jidx = jnp.arange(p)
-
-    def body(xs):
-        # xs: this rank's shard with leading dim x.shape[0]//p
-        r = jax.lax.axis_index(axis_name)
-        flat = xs.reshape(-1)
-        own, bs, pad = _split_blocks(flat, n)  # [n+1, bs]
-        # buffers[j]: blocks of root j; own row filled, others zero.
-        buf = jnp.zeros((p, n + 1, bs), xs.dtype)
-        buf = jax.lax.dynamic_update_slice(buf, own[None], (r, 0, 0))
-        S = jnp.asarray(recv_slots)  # [R, p] static slot table
-        base = (r - jidx) % p        # virtual rank of root row j at rank r
-
-        def send_slots_at(t):
-            return S[t][(base + bundle.skip[int(ks[t])]) % p]
-
-        msg = step.pack(buf, send_slots_at(0))
-        for t in range(R):
-            got = jax.lax.ppermute(
-                msg, axis_name, _rot_perm(p, bundle.skip[int(ks[t])])
-            )
-            if t + 1 < R:
-                buf, msg = step.shuffle(buf, got, S[t][base], send_slots_at(t + 1))
-            else:
-                buf = step.unpack(buf, got, S[t][base])
-        out = buf[:, :n, :].reshape(p, -1)[:, : flat.shape[0]]
-        return out.reshape((x.shape[0],) + x.shape[1:])
-
-    shard = _shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis_name),
-        out_specs=P(),
-        check_vma=False,  # result is replicated by construction
-    )
-    return shard(x)
+    return get_comm(mesh, axis_name, backend=backend, model=model).allgather(
+        x, n_blocks=n_blocks)
 
 
 def circulant_allgatherv(
@@ -264,84 +141,24 @@ def circulant_allgatherv(
     *,
     n_blocks: Optional[int] = None,
     backend: str = "jnp",
-    model: CommModel = CommModel(),
+    model: CommModel = DEFAULT_MODEL,
 ):
     """Irregular allgather (MPI_Allgatherv analogue), Algorithm 2 proper.
 
     ``x``: [p, cap] sharded over ``axis_name``; rank j's contribution is
-    x[j, :sizes[j]] (the rest is padding).  Sizes are static.  Every rank
-    divides its contribution into n blocks of (static, per-rank) size
-    ceil(sizes[j]/n); the per-round message concatenates one block per
-    root, so the wire volume tracks sum(sizes), not p*max(sizes) --
-    this is what makes the degenerate case fast (paper Figure 2).
-    Returns the replicated [p, cap] array with row j = rank j's data.
+    x[j, :sizes[j]] (the rest is padding).  Sizes are static; the wire
+    volume tracks sum(sizes), not p*max(sizes) (paper Figure 2's
+    degenerate case).  Returns the replicated [p, cap] array with row j
+    = rank j's data.  Shim over
+    :meth:`repro.core.comm.CirculantComm.allgatherv`.
 
     Block sizes are ragged per root, so the data plane uses the
-    round-step ``pack``/``unpack`` primitives per root row (the fused
-    shuffle needs a uniform message layout).  With ``backend="pallas"``
-    that means 2p single-row kernel launches per round -- correct and
-    tested, but launch overhead dominates the tiny copies, so prefer
-    the default ``"jnp"`` backend for ragged sizes.
+    round-step ``pack``/``unpack`` primitives per root row; with
+    ``backend="pallas"`` that means 2p single-row kernel launches per
+    round -- correct and tested, but prefer ``"jnp"`` for ragged sizes.
     """
-    p = mesh.shape[axis_name]
-    sizes = [int(s) for s in sizes]
-    assert len(sizes) == p
-    if p == 1:
-        return x
-    bundle = get_bundle(p)
-    total = sum(sizes)
-    n = n_blocks or max(
-        1, optimal_num_blocks_allgather(p, max(total, 1) * x.dtype.itemsize, model)
-    )
-    n = min(n, max(1, min([s for s in sizes if s > 0], default=1)))
-    bs_j = [max(1, -(-sizes[j] // n)) for j in range(p)]  # per-root block size
-    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
-    step = get_round_step(backend)
-    R = len(ks)
-    cap = x.shape[-1]
-
-    def body(xs):
-        r = jax.lax.axis_index(axis_name)
-        flat = xs.reshape(-1)  # [cap], own contribution padded to cap
-        # Per-root buffers with static per-root block sizes (+ garbage slot).
-        bufs: List[jnp.ndarray] = []
-        for j in range(p):
-            pj = jnp.pad(flat[: min(cap, n * bs_j[j])],
-                         (0, max(0, n * bs_j[j] - cap)))
-            own = jnp.concatenate(
-                [pj[: n * bs_j[j]].reshape(n, bs_j[j]),
-                 jnp.zeros((1, bs_j[j]), xs.dtype)], axis=0)
-            bufs.append(jnp.where(r == j, own, jnp.zeros_like(own)))
-        S = jnp.asarray(recv_slots)  # [R, p] static slot table
-        for t in range(R):
-            sk = bundle.skip[int(ks[t])]
-            parts = []
-            slots_r = []
-            for j in range(p):
-                ss = S[t][(r - j + sk) % p]
-                rs = S[t][(r - j) % p]
-                parts.append(step.pack(bufs[j][None], ss[None])[0])
-                slots_r.append(rs)
-            msg = jnp.concatenate(parts)  # [sum bs_j]
-            got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, sk))
-            o = 0
-            for j in range(p):
-                piece = got[o : o + bs_j[j]][None]
-                bufs[j] = step.unpack(bufs[j][None], piece, slots_r[j][None])[0]
-                o += bs_j[j]
-        rows = []
-        for j in range(p):
-            rj = bufs[j][:n].reshape(-1)[: sizes[j]]
-            rows.append(jnp.pad(rj, (0, cap - sizes[j])))
-        return jnp.stack(rows)
-
-    shard = _shard_map(
-        body, mesh=mesh, in_specs=P(axis_name), out_specs=P(), check_vma=False
-    )
-    return shard(x)
-
-
-# ---------------------------------------------------- reduce-scatter (NEW)
+    return get_comm(mesh, axis_name, backend=backend, model=model).allgatherv(
+        x, sizes, n_blocks=n_blocks)
 
 
 def circulant_reduce_scatter(
@@ -351,7 +168,7 @@ def circulant_reduce_scatter(
     *,
     n_blocks: Optional[int] = None,
     backend: str = "jnp",
-    model: CommModel = CommModel(),
+    model: CommModel = DEFAULT_MODEL,
 ):
     """BEYOND-PAPER: round-optimal reduce-scatter by *time reversal* of the
     circulant all-to-all broadcast (allgather and reduce-scatter are dual
@@ -362,80 +179,10 @@ def circulant_reduce_scatter(
     ``x``: [p, L] sharded on dim 0 over ``axis_name``; row r is rank r's
     full L-length contribution with L = p * shard.  Returns [p, shard]
     sharded the same way: row r = sum_r' x[r'] restricted to shard r.
-
-    Capped block indices (> n-1) are real deliveries for small n; the
-    reversal routes them with drain-after-send so every contribution
-    reaches its root exactly once (verified for all p<=100 x n<=13 in
-    tests).
+    Shim over :meth:`repro.core.comm.CirculantComm.reduce_scatter`.
     """
-    p = mesh.shape[axis_name]
-    if p == 1:
-        return x
-    bundle = get_bundle(p)
-    L = x.shape[1]
-    if L % p != 0:
-        raise ValueError(f"row length {L} not divisible by p={p}")
-    shard = L // p
-    n = n_blocks or max(
-        1, optimal_num_blocks_allgather(p, L * x.dtype.itemsize, model)
-    )
-    n = min(n, max(1, shard))
-    # Clamped reversed per-round tables (same single recv-derived table
-    # for forward-capture and accumulate slots -- Condition 2 again).
-    fwd_eff, acc_eff, ks = bundle.reversed_per_round_tables(n)
-    fwd_slots = np.where(fwd_eff < 0, n, np.minimum(fwd_eff, n - 1)).astype(np.int32)
-    acc_slots = np.where(acc_eff < 0, n, np.minimum(acc_eff, n - 1)).astype(np.int32)
-    step = get_round_step(backend)
-    R = len(ks)
-    jidx = jnp.arange(p)
-
-    def body(xs):
-        r = jax.lax.axis_index(axis_name)
-        # partials per root j: [p, n+1, bs] (slot n = garbage)
-        rows = xs[0].reshape(p, shard)              # contribution per root
-        bs = -(-shard // n)
-        pad = n * bs - shard
-        rows = jnp.pad(rows, ((0, 0), (0, pad)))
-        buf = jnp.concatenate(
-            [rows.reshape(p, n, bs), jnp.zeros((p, 1, bs), xs.dtype)], axis=1
-        ).astype(jnp.float32)
-        F = jnp.asarray(fwd_slots)  # [R, p] static slot tables
-        A = jnp.asarray(acc_slots)
-        base = (r - jidx) % p
-        garbage = jnp.full((p,), n, jnp.int32)
-        # Initial capture+drain of round 0's forwarded partials (the acc
-        # part folds a zero message into the garbage slots -- a no-op).
-        buf, msg = step.acc_shuffle(
-            buf, jnp.zeros((p, bs), buf.dtype), garbage, F[0][base], op="sum"
-        )
-        for t in range(R):
-            sk = bundle.skip[int(ks[t])]
-            got = jax.lax.ppermute(msg, axis_name, _rot_perm(p, p - sk % p))
-            nxt = F[t + 1][base] if t + 1 < R else garbage
-            # accumulate round t's incoming partials, then capture+drain
-            # round t+1's forwards (drain-after-send: each partial flows
-            # along exactly one tree edge).
-            buf, msg = step.acc_shuffle(buf, got, A[t][base], nxt, op="sum")
-        own = jax.lax.dynamic_slice(buf, (r, 0, 0), (1, n, bs))
-        out = own.reshape(-1)[:shard].astype(xs.dtype)
-        return out[None]
-
-    shard_fn = _shard_map(
-        body, mesh=mesh, in_specs=P(axis_name), out_specs=P(axis_name),
-        check_vma=(backend == "jnp"),
-    )
-    return shard_fn(x)
-
-
-# ------------------------------------- reversed-schedule collective family
-#
-# The recv/send schedules are time-reversible (Träff, arXiv:2407.18004):
-# replaying the broadcast rounds backwards (t -> R-1-t) with every edge
-# flipped turns the round-optimal broadcast into a round-optimal
-# *reduction*, and composing reduction + broadcast yields all-reduction
-# in 2(n-1)+2*ceil(log2 p) rounds.  The reversed tables come from the
-# same cached bundle (engine rev_recv/rev_send: the forward tables with
-# roles swapped -- no second table build).
+    return get_comm(mesh, axis_name, backend=backend,
+                    model=model).reduce_scatter(x, n_blocks=n_blocks)
 
 
 def circulant_reduce(
@@ -447,82 +194,20 @@ def circulant_reduce(
     root: int = 0,
     op: str = "sum",
     backend: str = "jnp",
-    model: CommModel = CommModel(),
+    model: CommModel = DEFAULT_MODEL,
 ):
     """Round-optimal n-block reduction to ``root`` (reversed Algorithm 1).
 
-    ``x`` has a leading axis of size p sharded over ``axis_name`` (each
-    rank owns one slice).  Returns an array of the same spec where the
-    root's slice is the elementwise op-reduction of all slices and every
-    other slice is zero.  Runs in the optimal ``n-1+ceil(log2 p)``
-    ppermute rounds -- the time reversal of the broadcast
-    (arXiv:2407.18004) inherits the forward schedule's optimal round
-    count and satisfies the reversed Correctness Conditions 3-4 checked
-    by ``verify_reversed_schedules``: the reversed round for forward round
-    (k, off) sends the partial of the forward-*received* block to the
-    forward from-neighbor (rotation by -skip[k]) and accumulates the
-    incoming partial into the forward-*sent* block.
-
-    Partials are drained after each forward (capture - drain -
-    accumulate), so final-phase capped re-sends move an already-emptied
-    (identity) partial and every contribution reaches the root exactly
-    once -- which makes ``op="sum"`` bit-exact, not just ``"max"``.
-    Buffers carry n+2 slots: slot n is garbage, slot n+1 pins the op
-    identity so the root (which never forwards a live partial) always
-    ships the identity.  ``backend`` selects the per-round data plane
-    ("jnp" or "pallas": the fused accumulate+capture/drain kernel), see
-    :mod:`repro.core.roundstep`.
+    ``x`` has a leading axis of size p sharded over ``axis_name``.
+    Returns an array of the same spec where the root's slice is the
+    elementwise op-reduction (``"sum"`` or ``"max"``, exact by the
+    capture-drain-accumulate rule) of all slices and every other slice
+    is zero, in the optimal ``n-1+ceil(log2 p)`` rounds
+    (arXiv:2407.18004 time reversal).  Shim over
+    :meth:`repro.core.comm.CirculantComm.reduce`.
     """
-    p = mesh.shape[axis_name]
-    if p == 1:
-        return x
-    # Combine/identity semantics shared with the kernels and the jnp
-    # oracle -- one registry, so drained slots and the identity slot the
-    # data plane ships agree bit-for-bit (validates op before tracing).
-    from repro.kernels.reduce_ops import op_identity
-
-    bundle = get_bundle(p, root)
-    if x.shape[0] != p:
-        raise ValueError("x must have leading axis == axis size (one slice/rank)")
-    elems = int(np.prod(x.shape[1:]))
-    n = n_blocks or max(1, optimal_num_blocks_reduce(p, elems * x.dtype.itemsize, model))
-    n = min(n, max(1, elems))
-    fwd_slots, acc_slots, ks = reduce_slot_plan(bundle, n)
-    step = get_round_step(backend)
-    R = len(ks)
-    ident = op_identity(op, x.dtype)
-
-    def body(xs):
-        r = jax.lax.axis_index(axis_name)
-        flat = xs.reshape(-1)
-        buf, bs, pad = _split_blocks(flat, n)     # [n+1, bs]: data + garbage
-        buf = jnp.concatenate(
-            [buf, jnp.full((1, bs), ident, buf.dtype)], axis=0
-        )[None]                                   # [1, n+2, bs]: + identity slot
-        F = jnp.asarray(fwd_slots)  # [R, p] static slot tables (root row
-        A = jnp.asarray(acc_slots)  # pinned to the identity slot n+1)
-        garbage = jnp.full((1,), n, jnp.int32)
-        # Initial capture+drain of round 0's forwarded partial.
-        buf, msg = step.acc_shuffle(
-            buf, jnp.zeros((1, bs), buf.dtype), garbage, F[0, r][None], op=op
-        )
-        for t in range(R):
-            got = jax.lax.ppermute(
-                msg, axis_name, _rot_perm(p, (p - bundle.skip[int(ks[t])]) % p)
-            )
-            nxt = F[t + 1, r][None] if t + 1 < R else garbage
-            buf, msg = step.acc_shuffle(buf, got, A[t, r][None], nxt, op=op)
-        out = buf[0, :n].reshape(-1)[: flat.shape[0]].reshape(xs.shape)
-        return jnp.where(r == root, out, jnp.zeros_like(out))
-
-    shard = _shard_map(
-        body,
-        mesh=mesh,
-        in_specs=P(axis_name),
-        out_specs=P(axis_name),
-        check_vma=(backend == "jnp"),
-    )
-    return shard(x)
+    return get_comm(mesh, axis_name, backend=backend, model=model).reduce(
+        x, n_blocks=n_blocks, root=root, op=op)
 
 
 def circulant_allreduce(
@@ -534,37 +219,18 @@ def circulant_allreduce(
     root: int = 0,
     op: str = "sum",
     backend: str = "jnp",
-    model: CommModel = CommModel(),
+    model: CommModel = DEFAULT_MODEL,
 ):
     """All-reduction in the composed ``2(n-1)+2*ceil(log2 p)`` rounds.
 
     Reduce to ``root`` on the reversed schedule, then broadcast the
-    result back on the forward schedule (the reduce+broadcast
-    composition of arXiv:2407.18004) -- both phases run on the same
-    cached ``get_bundle(p, root)`` tables and the same block count n,
-    so the composition is exactly twice the optimal single-collective
-    round count ``n-1+ceil(log2 p)``.
-    ``x`` is [p, ...] sharded over ``axis_name``; every output slice
-    equals the elementwise op-reduction (``"sum"`` or ``"max"``, exact
-    per the capture-drain-accumulate rule of :func:`circulant_reduce`)
-    of all input slices.  ``backend`` selects the per-round data plane
-    for both phases ("jnp" or "pallas").
+    result back on the forward schedule -- both phases on the same
+    cached bundle and block count.  Every output slice equals the
+    elementwise op-reduction of all input slices.  Shim over
+    :meth:`repro.core.comm.CirculantComm.allreduce`.
     """
-    p = mesh.shape[axis_name]
-    if p == 1:
-        return x
-    if x.shape[0] != p:
-        raise ValueError("x must have leading axis == axis size (one slice/rank)")
-    elems = int(np.prod(x.shape[1:]))
-    n = n_blocks or max(1, optimal_num_blocks_reduce(p, elems * x.dtype.itemsize, model))
-    n = min(n, max(1, elems))
-    red = circulant_reduce(
-        mesh, axis_name, x, n_blocks=n, root=root, op=op, backend=backend,
-        model=model,
-    )
-    return circulant_broadcast(
-        mesh, axis_name, red, n_blocks=n, root=root, backend=backend, model=model
-    )
+    return get_comm(mesh, axis_name, backend=backend, model=model).allreduce(
+        x, n_blocks=n_blocks, root=root, op=op)
 
 
 def circulant_allbroadcast(
@@ -574,21 +240,17 @@ def circulant_allbroadcast(
     *,
     n_blocks: Optional[int] = None,
     backend: str = "jnp",
-    model: CommModel = CommModel(),
+    model: CommModel = DEFAULT_MODEL,
 ):
     """All-broadcast: every rank's slice reaches every rank in the
     optimal ``n-1+ceil(log2 p)`` rounds.
 
     The collective-family name (arXiv:2407.18004) for the all-to-all
-    broadcast of Algorithm 2; identical to :func:`circulant_allgather`
-    -- each rank acts as the root of its own forward broadcast, all p
-    interleaved on the same circulant graph with one packed message per
-    round, so the round count matches the single-root broadcast.
-    ``backend`` selects the per-round data plane ("jnp" or "pallas").
+    broadcast of Algorithm 2; identical to :func:`circulant_allgather`.
+    Shim over :meth:`repro.core.comm.CirculantComm.allbroadcast`.
     """
-    return circulant_allgather(
-        mesh, axis_name, x, n_blocks=n_blocks, backend=backend, model=model
-    )
+    return get_comm(mesh, axis_name, backend=backend,
+                    model=model).allbroadcast(x, n_blocks=n_blocks)
 
 
 # ----------------------------------------------------------- ring baseline

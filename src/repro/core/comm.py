@@ -1,0 +1,1020 @@
+"""Communicator front-end: plan once, execute many.
+
+The paper's headline split -- an O(log p) one-time schedule
+*computation* fully decoupled from the n-1+ceil(log2 p) *execution*
+rounds -- deserves an API with the same shape.  This module provides it,
+following the communicator/plan separation MPI-style libraries use for
+exactly this collective family (Träff, arXiv:2407.18004):
+
+  * :class:`CirculantComm` binds the static context (mesh, axis,
+    round-step backend, cost model) once;
+  * ``comm.plan(kind, payload_spec, ...)`` precomputes **everything**
+    host-side -- the cached schedule bundle, the clamped per-round slot
+    tables, the per-round ppermute rotations, the round-step backend
+    handle, and the jit-compiled executor -- into an immutable
+    :class:`CollectivePlan`;
+  * ``plan(payload)`` runs only the traced rounds: no schedule or
+    slot-table work happens per call, just a payload-spec check and the
+    jit dispatch;
+  * ``comm.broadcast(...)`` / ``allgather`` / ``allgatherv`` /
+    ``reduce_scatter`` / ``reduce`` / ``allreduce`` / ``allbroadcast``
+    are thin plan-cache lookups, so casual call sites get plan reuse
+    for free.  The legacy ``circulant_*`` functions in
+    :mod:`repro.core.collectives` are shims over these.
+
+Payloads are arbitrary **pytrees**: the plan flattens the tree, splits
+every leaf into the same number of blocks n (per-leaf block size
+``ceil(leaf_elems / n)``, so ragged leaves just pad their last block),
+and runs **one shared schedule** for all leaves -- each communication
+round is one ``ppermute`` per leaf on the same rotation, so the round
+count stays the single-collective optimum regardless of tree size, and
+leaves keep their dtypes (no flatten-to-float32 detour).
+
+Plans are stored in the engine's process-wide spec-keyed plan cache
+(:func:`repro.core.engine.cached_plan`), keyed on (mesh, axis, backend,
+model, kind, payload spec, resolved block count, root, op): planning
+the same collective twice returns the *same* object -- including
+``n_blocks=None`` vs an explicit ``n_blocks`` equal to the cost-model
+optimum -- and the first execution's XLA compilation is shared by every
+later call with the same spec.
+
+The module also hosts the :class:`HostDataPlan` certification path: the
+single-process executions of the full data plane (kernel rows standing
+in for the p ranks, ``jnp.roll`` as the network exchange) that
+:mod:`repro.core.simulator` asserts bit-exact against its
+message-passing reference -- routed through the same plan cache, so
+certification sweeps reuse slot tables and step handles too.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .costmodel import (
+    DEFAULT_MODEL,
+    CommModel,
+    optimal_num_blocks_allgather,
+    optimal_num_blocks_bcast,
+    optimal_num_blocks_reduce,
+)
+from .engine import ScheduleBundle, cached_plan, get_bundle
+from .jaxcompat import shard_map as _shard_map
+from .roundstep import (
+    BACKENDS,
+    broadcast_slot_plan,
+    get_round_step,
+    reduce_slot_plan,
+    scatter_slot_plan,
+)
+
+__all__ = [
+    "KINDS",
+    "PayloadSpec",
+    "payload_spec",
+    "CollectivePlan",
+    "CirculantComm",
+    "get_comm",
+    "HostDataPlan",
+    "host_plan",
+]
+
+#: Collective kinds a plan can be built for.  ``"allbroadcast"`` is the
+#: family name (arXiv:2407.18004) for the all-to-all broadcast and
+#: canonicalizes to ``"allgather"`` -- both resolve to the same plan.
+KINDS = (
+    "broadcast",
+    "allgather",
+    "allgatherv",
+    "reduce_scatter",
+    "reduce",
+    "allreduce",
+    "allbroadcast",
+)
+
+_CANONICAL_KIND = {"allbroadcast": "allgather"}
+
+
+# ------------------------------------------------------------- payload spec
+
+
+@dataclass(frozen=True)
+class PayloadSpec:
+    """Hashable shape/dtype signature of a pytree payload.
+
+    ``treedef`` is the jax tree structure; ``leaves`` is a tuple of
+    ``(shape, dtype)`` per leaf in flatten order.  Two payloads with
+    equal specs share one plan (and one compiled executor).
+    """
+
+    treedef: Any
+    leaves: Tuple[Tuple[Tuple[int, ...], np.dtype], ...]
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.leaves)
+
+    def describe(self) -> str:
+        body = ", ".join(f"{s}:{np.dtype(d).name}" for s, d in self.leaves)
+        return f"{self.treedef} [{body}]"
+
+
+def payload_spec(payload: Any) -> PayloadSpec:
+    """The :class:`PayloadSpec` of a payload pytree.
+
+    Leaves may be jax/NumPy arrays or ``jax.ShapeDtypeStruct``s (so
+    specs can be built without materializing data).  Passing an existing
+    spec returns it unchanged.
+    """
+    if isinstance(payload, PayloadSpec):
+        return payload
+    leaves, treedef = jax.tree.flatten(payload)
+    entries = []
+    for leaf in leaves:
+        if not hasattr(leaf, "shape") or not hasattr(leaf, "dtype"):
+            leaf = np.asarray(leaf)
+        entries.append((tuple(int(s) for s in leaf.shape), np.dtype(leaf.dtype)))
+    return PayloadSpec(treedef=treedef, leaves=tuple(entries))
+
+
+# ------------------------------------------------------------ small helpers
+
+
+def _rot_perm(p: int, s: int):
+    """Static ppermute pairs for the rotation r -> (r + s) % p."""
+    return [(r, (r + s) % p) for r in range(p)]
+
+
+def _split_blocks(flat: jnp.ndarray, n: int):
+    """Split a flat vector into n padded blocks + 1 garbage slot: [n+1, B]."""
+    size = flat.shape[0]
+    bs = -(-size // n)  # ceil
+    pad = n * bs - size
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(n, bs)
+    garbage = jnp.zeros((1, bs), flat.dtype)
+    return jnp.concatenate([blocks, garbage], axis=0), bs, pad
+
+
+def _leaf_elems(shape: Tuple[int, ...]) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def _tree_executor(shard_fn: Callable, treedef: Any) -> Callable:
+    """Wrap a leaves-in/leaves-out shard_map callable as payload->payload."""
+    def execute(payload):
+        leaves = treedef.flatten_up_to(payload)
+        return jax.tree.unflatten(treedef, list(shard_fn(*leaves)))
+
+    return execute
+
+
+def _acc_dtype(dt: np.dtype):
+    """Accumulation dtype for the reduce-scatter partials: sub-float32
+    floats (bf16/f16) widen to float32 for stable sums; everything else
+    (int32/int64/float32/float64) accumulates natively, so integer sums
+    are bit-exact."""
+    if jnp.issubdtype(dt, jnp.inexact) and np.dtype(dt).itemsize < 4:
+        return jnp.float32
+    return dt
+
+
+# ------------------------------------------------------- device lowerings
+#
+# One lowering per collective kind.  Each takes the static plan inputs
+# and returns ``execute(payload) -> payload`` built from a single
+# shard_map body that loops leaves *inside* the round loop: every round
+# is one ppermute per leaf on the same rotation, so all leaves ride one
+# shared schedule (the round count is the single-collective optimum
+# regardless of the tree size).
+
+
+def _lower_broadcast(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
+                     n: int, root: int, backend: str,
+                     spec: PayloadSpec) -> Callable:
+    p = bundle.p
+    recv_slots, send_slots, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
+    perms = [_rot_perm(p, bundle.skip[int(k)]) for k in ks]
+    L = spec.num_leaves
+
+    def body(*shards):
+        r = jax.lax.axis_index(axis_name)
+        recv_t = jnp.asarray(recv_slots)  # [R, p] static slot tables
+        send_t = jnp.asarray(send_slots)
+        bufs, msgs, meta = [], [], []
+        for xs in shards:
+            flat = xs.reshape(-1)
+            buf, _, _ = _split_blocks(flat, n)
+            buf = jnp.where(r == root, buf, jnp.zeros_like(buf))[None]
+            bufs.append(buf)
+            meta.append((flat.shape[0], xs.shape))
+            msgs.append(step.pack(buf, send_t[0, r][None]))
+        for t in range(R):
+            got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
+            for i in range(L):
+                if t + 1 < R:
+                    bufs[i], msgs[i] = step.shuffle(
+                        bufs[i], got[i], recv_t[t, r][None],
+                        send_t[t + 1, r][None])
+                else:
+                    bufs[i] = step.unpack(bufs[i], got[i], recv_t[t, r][None])
+        return tuple(
+            buf[0, :n].reshape(-1)[:size].reshape(shape)
+            for buf, (size, shape) in zip(bufs, meta)
+        )
+
+    shard_fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name),) * L,
+        out_specs=(P(axis_name),) * L,
+        # jax has no replication rule for pallas_call inside shard_map.
+        check_vma=(backend == "jnp"),
+    )
+
+    return _tree_executor(shard_fn, spec.treedef)
+
+
+def _lower_allgather(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
+                     n: int, backend: str, spec: PayloadSpec) -> Callable:
+    p = bundle.p
+    # One clamped [R, p] slot table serves recv AND send: by Condition 2
+    # the send slot of root row j is the recv slot of the shifted
+    # virtual rank, so both are gathers of the same table.
+    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
+    perms = [_rot_perm(p, bundle.skip[int(k)]) for k in ks]
+    skips = [int(bundle.skip[int(k)]) for k in ks]
+    L = spec.num_leaves
+
+    def body(*shards):
+        r = jax.lax.axis_index(axis_name)
+        S = jnp.asarray(recv_slots)  # [R, p] static slot table
+        base = (r - jnp.arange(p)) % p  # virtual rank of root row j at rank r
+
+        def send_slots_at(t):
+            return S[t][(base + skips[t]) % p]
+
+        bufs, meta = [], []
+        for xs in shards:
+            # xs: this rank's shard; buffers[j] holds root j's blocks.
+            flat = xs.reshape(-1)
+            own, _, _ = _split_blocks(flat, n)  # [n+1, bs]
+            buf = jnp.zeros((p,) + own.shape, xs.dtype)
+            buf = jax.lax.dynamic_update_slice(buf, own[None], (r, 0, 0))
+            bufs.append(buf)
+            meta.append((flat.shape[0], xs.shape))
+        msgs = [step.pack(buf, send_slots_at(0)) for buf in bufs]
+        for t in range(R):
+            got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
+            for i in range(L):
+                if t + 1 < R:
+                    bufs[i], msgs[i] = step.shuffle(
+                        bufs[i], got[i], S[t][base], send_slots_at(t + 1))
+                else:
+                    bufs[i] = step.unpack(bufs[i], got[i], S[t][base])
+        outs = []
+        for buf, (size, shape) in zip(bufs, meta):
+            out = buf[:, :n, :].reshape(p, -1)[:, :size]
+            outs.append(out.reshape((p * shape[0],) + tuple(shape[1:])))
+        return tuple(outs)
+
+    shard_fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name),) * L,
+        out_specs=(P(),) * L,
+        check_vma=False,  # result is replicated by construction
+    )
+
+    return _tree_executor(shard_fn, spec.treedef)
+
+
+def _lower_allgatherv(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
+                      n: int, backend: str, spec: PayloadSpec,
+                      sizes_canon: Tuple[Tuple[int, ...], ...]) -> Callable:
+    p = bundle.p
+    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
+    perms = [_rot_perm(p, bundle.skip[int(k)]) for k in ks]
+    skips = [int(bundle.skip[int(k)]) for k in ks]
+    caps = [shape[1] for shape, _ in spec.leaves]
+    # Static per-(leaf, root) block sizes: the wire volume tracks
+    # sum(sizes), not p*max(sizes) (paper Figure 2's degenerate case).
+    bs_all = [[max(1, -(-s // n)) for s in sizes] for sizes in sizes_canon]
+    L = spec.num_leaves
+
+    def body(*shards):
+        r = jax.lax.axis_index(axis_name)
+        S = jnp.asarray(recv_slots)  # [R, p] static slot table
+        allbufs: List[List[jnp.ndarray]] = []
+        for xs, bs_j, cap in zip(shards, bs_all, caps):
+            flat = xs.reshape(-1)  # own contribution padded to cap
+            bufs = []
+            for j in range(p):
+                pj = jnp.pad(flat[: min(cap, n * bs_j[j])],
+                             (0, max(0, n * bs_j[j] - cap)))
+                own = jnp.concatenate(
+                    [pj[: n * bs_j[j]].reshape(n, bs_j[j]),
+                     jnp.zeros((1, bs_j[j]), xs.dtype)], axis=0)
+                bufs.append(jnp.where(r == j, own, jnp.zeros_like(own)))
+            allbufs.append(bufs)
+        for t in range(R):
+            sk = skips[t]
+            gots, all_slots = [], []
+            for bufs, bs_j in zip(allbufs, bs_all):
+                parts, slots_r = [], []
+                for j in range(p):
+                    ss = S[t][(r - j + sk) % p]
+                    slots_r.append(S[t][(r - j) % p])
+                    parts.append(step.pack(bufs[j][None], ss[None])[0])
+                msg = jnp.concatenate(parts)  # [sum bs_j]
+                gots.append(jax.lax.ppermute(msg, axis_name, perms[t]))
+                all_slots.append(slots_r)
+            for bufs, bs_j, got, slots_r in zip(allbufs, bs_all, gots,
+                                                all_slots):
+                o = 0
+                for j in range(p):
+                    piece = got[o: o + bs_j[j]][None]
+                    bufs[j] = step.unpack(bufs[j][None], piece,
+                                          slots_r[j][None])[0]
+                    o += bs_j[j]
+        outs = []
+        for bufs, sizes, cap in zip(allbufs, sizes_canon, caps):
+            rows = []
+            for j in range(p):
+                rj = bufs[j][:n].reshape(-1)[: sizes[j]]
+                rows.append(jnp.pad(rj, (0, cap - sizes[j])))
+            outs.append(jnp.stack(rows))
+        return tuple(outs)
+
+    shard_fn = _shard_map(
+        body, mesh=mesh, in_specs=(P(axis_name),) * L,
+        out_specs=(P(),) * L, check_vma=False,
+    )
+
+    return _tree_executor(shard_fn, spec.treedef)
+
+
+def _lower_reduce(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
+                  n: int, root: int, op: str, backend: str,
+                  spec: PayloadSpec) -> Callable:
+    from repro.kernels.reduce_ops import op_identity
+
+    p = bundle.p
+    fwd_slots, acc_slots, ks = reduce_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
+    perms = [_rot_perm(p, (p - bundle.skip[int(k)]) % p) for k in ks]
+    idents = [op_identity(op, dt) for _, dt in spec.leaves]
+    L = spec.num_leaves
+
+    def body(*shards):
+        r = jax.lax.axis_index(axis_name)
+        F = jnp.asarray(fwd_slots)  # [R, p] static slot tables (root row
+        A = jnp.asarray(acc_slots)  # pinned to the identity slot n+1)
+        garbage = jnp.full((1,), n, jnp.int32)
+        bufs, msgs, meta = [], [], []
+        for xs, ident in zip(shards, idents):
+            flat = xs.reshape(-1)
+            buf, bs, _ = _split_blocks(flat, n)       # [n+1, bs]
+            buf = jnp.concatenate(
+                [buf, jnp.full((1, bs), ident, buf.dtype)], axis=0
+            )[None]                                   # [1, n+2, bs]
+            # Initial capture+drain of round 0's forwarded partial.
+            buf, msg = step.acc_shuffle(
+                buf, jnp.zeros((1, bs), buf.dtype), garbage, F[0, r][None],
+                op=op)
+            bufs.append(buf)
+            msgs.append(msg)
+            meta.append((flat.shape[0], xs.shape))
+        for t in range(R):
+            got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
+            nxt = F[t + 1, r][None] if t + 1 < R else garbage
+            for i in range(L):
+                # accumulate round t's incoming partial, then capture+
+                # drain round t+1's forward (each partial flows along
+                # exactly one tree edge).
+                bufs[i], msgs[i] = step.acc_shuffle(
+                    bufs[i], got[i], A[t, r][None], nxt, op=op)
+        outs = []
+        for buf, (size, shape) in zip(bufs, meta):
+            out = buf[0, :n].reshape(-1)[:size].reshape(shape)
+            outs.append(jnp.where(r == root, out, jnp.zeros_like(out)))
+        return tuple(outs)
+
+    shard_fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name),) * L,
+        out_specs=(P(axis_name),) * L,
+        check_vma=(backend == "jnp"),
+    )
+
+    return _tree_executor(shard_fn, spec.treedef)
+
+
+def _lower_reduce_scatter(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
+                          n: int, backend: str,
+                          spec: PayloadSpec) -> Callable:
+    p = bundle.p
+    fwd_slots, acc_slots, ks = scatter_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    R = len(ks)
+    perms = [_rot_perm(p, (p - bundle.skip[int(k)]) % p) for k in ks]
+    shard_l = [shape[1] // p for shape, _ in spec.leaves]
+    L = spec.num_leaves
+
+    def body(*shards):
+        r = jax.lax.axis_index(axis_name)
+        F = jnp.asarray(fwd_slots)  # [R, p] static slot tables
+        A = jnp.asarray(acc_slots)
+        base = (r - jnp.arange(p)) % p
+        garbage = jnp.full((p,), n, jnp.int32)
+        bufs, msgs, meta = [], [], []
+        for xs, shard in zip(shards, shard_l):
+            rows = xs[0].reshape(p, shard)            # contribution per root
+            bs = -(-shard // n)
+            rows = jnp.pad(rows, ((0, 0), (0, n * bs - shard)))
+            # Partials accumulate in _acc_dtype: native for ints (so the
+            # sums are bit-exact) and >= float32 floats, widened to
+            # float32 for bf16/f16 stability.
+            buf = jnp.concatenate(
+                [rows.reshape(p, n, bs), jnp.zeros((p, 1, bs), xs.dtype)],
+                axis=1,
+            ).astype(_acc_dtype(xs.dtype))
+            # Initial capture+drain of round 0's forwarded partials.
+            buf, msg = step.acc_shuffle(
+                buf, jnp.zeros((p, bs), buf.dtype), garbage, F[0][base],
+                op="sum")
+            bufs.append(buf)
+            msgs.append(msg)
+            meta.append((shard, bs, xs.dtype))
+        for t in range(R):
+            got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
+            nxt = F[t + 1][base] if t + 1 < R else garbage
+            for i in range(L):
+                bufs[i], msgs[i] = step.acc_shuffle(
+                    bufs[i], got[i], A[t][base], nxt, op="sum")
+        outs = []
+        for buf, (shard, bs, dt) in zip(bufs, meta):
+            own = jax.lax.dynamic_slice(buf, (r, 0, 0), (1, n, bs))
+            outs.append(own.reshape(-1)[:shard].astype(dt)[None])
+        return tuple(outs)
+
+    shard_fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name),) * L,
+        out_specs=(P(axis_name),) * L,
+        check_vma=(backend == "jnp"),
+    )
+
+    return _tree_executor(shard_fn, spec.treedef)
+
+
+# ------------------------------------------------------------ plan objects
+
+
+@dataclass(frozen=True, eq=False)
+class CollectivePlan:
+    """A fully precomputed, immutable collective: call it with payloads.
+
+    Everything static was resolved at plan time -- the cached schedule
+    bundle, the clamped per-round slot tables, the per-round rotations,
+    the round-step backend handle, and the jit-compiled executor.
+    ``plan(payload)`` validates the payload against ``spec`` and
+    dispatches the compiled rounds; there is **no** schedule or
+    slot-table work per call.  Plans are cached process-wide: building
+    the same plan twice returns the same object (compare with ``is``).
+    """
+
+    kind: str
+    spec: PayloadSpec
+    p: int
+    root: int
+    op: Optional[str]
+    n_blocks: int
+    rounds: int
+    backend: str
+    axis_name: str
+    _execute: Optional[Callable] = field(repr=False, default=None)
+
+    def __call__(self, payload: Any) -> Any:
+        leaves, treedef = jax.tree.flatten(payload)
+        if treedef != self.spec.treedef:
+            raise ValueError(
+                f"payload tree {treedef} does not match the plan spec "
+                f"{self.spec.treedef}"
+            )
+        for i, (leaf, (shape, dtype)) in enumerate(zip(leaves,
+                                                       self.spec.leaves)):
+            if not hasattr(leaf, "shape") or not hasattr(leaf, "dtype"):
+                leaf = np.asarray(leaf)
+            got_shape = tuple(int(s) for s in leaf.shape)
+            got_dtype = np.dtype(leaf.dtype)
+            if got_shape != shape or got_dtype != dtype:
+                raise ValueError(
+                    f"payload leaf {i} is {got_shape}:{got_dtype.name}, "
+                    f"plan expects {shape}:{np.dtype(dtype).name}"
+                )
+        if self._execute is None:  # p == 1 fast path: nothing moves
+            return payload
+        return self._execute(payload)
+
+    def describe(self) -> str:
+        """One-line human summary of the plan."""
+        extra = f" op={self.op}" if self.op else ""
+        return (f"{self.kind} p={self.p} root={self.root} "
+                f"n={self.n_blocks} rounds={self.rounds} "
+                f"backend={self.backend}{extra} spec={self.spec.describe()}")
+
+
+# --------------------------------------------------------- n-block choice
+
+
+def _resolve_broadcast(spec: PayloadSpec, p: int, n_blocks: Optional[int],
+                       model: CommModel, optimizer) -> int:
+    elems, total = [], 0
+    for shape, dtype in spec.leaves:
+        _require(len(shape) >= 1 and shape[0] == p,
+                 "payload leaves must have leading axis == axis size "
+                 f"(one slice/rank); got {shape} for p={p}")
+        e = _leaf_elems(shape[1:])
+        elems.append(e)
+        total += e * np.dtype(dtype).itemsize
+    n = n_blocks or max(1, optimizer(p, total, model))
+    return min(n, max(1, max(elems)))
+
+
+def _resolve_allgather(spec: PayloadSpec, p: int, n_blocks: Optional[int],
+                       model: CommModel) -> int:
+    shard_elems, total = [], 0
+    for shape, dtype in spec.leaves:
+        _require(len(shape) >= 1 and shape[0] % p == 0,
+                 f"leading dim {shape[0] if shape else 0} not divisible by "
+                 f"axis size {p}")
+        e = (shape[0] // p) * _leaf_elems(shape[1:])
+        shard_elems.append(e)
+        total += e * np.dtype(dtype).itemsize
+    n = n_blocks or max(1, optimal_num_blocks_allgather(p, total * p, model))
+    return min(n, max(1, max(shard_elems)))
+
+
+def _resolve_allgatherv(spec: PayloadSpec, p: int, n_blocks: Optional[int],
+                        model: CommModel,
+                        sizes_canon: Tuple[Tuple[int, ...], ...]) -> int:
+    total = 0
+    min_pos = None
+    for (shape, dtype), sizes in zip(spec.leaves, sizes_canon):
+        _require(len(shape) == 2 and shape[0] == p,
+                 f"allgatherv leaves must be [p, cap]; got {shape} for p={p}")
+        _require(len(sizes) == p, f"sizes must have length p={p}")
+        for s in sizes:
+            _require(0 <= s <= shape[1],
+                     f"size {s} out of range for leaf capacity {shape[1]}")
+            if s > 0:
+                min_pos = s if min_pos is None else min(min_pos, s)
+        total += sum(sizes) * np.dtype(dtype).itemsize
+    n = n_blocks or max(
+        1, optimal_num_blocks_allgather(p, max(total, 1), model))
+    return min(n, max(1, min_pos if min_pos is not None else 1))
+
+
+def _resolve_reduce_scatter(spec: PayloadSpec, p: int,
+                            n_blocks: Optional[int],
+                            model: CommModel) -> int:
+    shards, total = [], 0
+    for shape, dtype in spec.leaves:
+        _require(len(shape) == 2 and shape[0] == p,
+                 f"reduce_scatter leaves must be [p, L]; got {shape}")
+        _require(shape[1] % p == 0,
+                 f"row length {shape[1]} not divisible by p={p}")
+        shards.append(shape[1] // p)
+        total += shape[1] * np.dtype(dtype).itemsize
+    n = n_blocks or max(1, optimal_num_blocks_allgather(p, total, model))
+    return min(n, max(1, max(shards)))
+
+
+def _is_sizes_leaf(x: Any) -> bool:
+    """A per-rank size vector: a flat int sequence or a NumPy array."""
+    if isinstance(x, np.ndarray):
+        return True
+    return isinstance(x, (list, tuple)) and all(
+        isinstance(s, (int, np.integer)) for s in x)
+
+
+def _canon_sizes(spec: PayloadSpec, sizes: Any) -> Tuple[Tuple[int, ...], ...]:
+    """Normalize allgatherv sizes: one per-rank list shared by every
+    leaf, or a pytree of per-rank lists matching the payload structure."""
+    _require(sizes is not None, "allgatherv requires sizes")
+    if _is_sizes_leaf(sizes):
+        per_leaf = [sizes] * spec.num_leaves
+    else:
+        treedef = jax.tree.structure(sizes, is_leaf=_is_sizes_leaf)
+        _require(
+            treedef == spec.treedef,
+            f"sizes tree {treedef} does not match payload tree "
+            f"{spec.treedef} (pass one per-rank list to share it)")
+        per_leaf = jax.tree.leaves(sizes, is_leaf=_is_sizes_leaf)
+    return tuple(tuple(int(s) for s in leaf_sizes) for leaf_sizes in per_leaf)
+
+
+# -------------------------------------------------------------- the comm
+
+
+@dataclass(frozen=True)
+class CirculantComm:
+    """Communicator for the circulant collective family on one mesh axis.
+
+    Binds the static context -- mesh, axis, round-step ``backend``
+    (``"jnp"`` or ``"pallas"``), alpha-beta cost ``model`` -- once.
+    ``plan`` precomputes a :class:`CollectivePlan`; the named collective
+    methods are thin plan-cache lookups over it.  Frozen and hashable,
+    so communicators themselves are valid cache keys.
+    """
+
+    mesh: Mesh
+    axis_name: str
+    backend: str = "jnp"
+    model: CommModel = DEFAULT_MODEL
+
+    def __post_init__(self):
+        if self.axis_name not in self.mesh.shape:
+            raise ValueError(
+                f"axis {self.axis_name!r} not in mesh axes "
+                f"{tuple(self.mesh.shape)}")
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown round-step backend {self.backend!r} "
+                f"(use one of {BACKENDS})")
+
+    @property
+    def p(self) -> int:
+        return self.mesh.shape[self.axis_name]
+
+    # ------------------------------------------------------------- planning
+
+    def plan(self, kind: str, spec: Any, *, n_blocks: Optional[int] = None,
+             root: int = 0, op: str = "sum",
+             sizes: Any = None) -> CollectivePlan:
+        """Precompute a :class:`CollectivePlan` for ``kind`` and a payload
+        spec (an example payload, a pytree of ``ShapeDtypeStruct``s, or a
+        :class:`PayloadSpec`).  Cached process-wide: equal arguments
+        return the identical plan object.
+        """
+        if kind not in KINDS:
+            raise ValueError(f"unknown collective kind {kind!r} "
+                             f"(use one of {KINDS})")
+        kind = _CANONICAL_KIND.get(kind, kind)
+        spec = payload_spec(spec)
+        _require(spec.num_leaves > 0, "payload has no array leaves")
+        # Arguments that don't apply to the kind are rejected (a silently
+        # dropped op= or root= would return numerically wrong results
+        # with no diagnostic), then normalized out of the cache key.
+        rooted = kind in ("broadcast", "reduce", "allreduce")
+        reducing = kind in ("reduce", "allreduce")
+        _require(rooted or int(root) == 0,
+                 f"root= does not apply to kind {kind!r}")
+        _require(reducing or op == "sum",
+                 f"op= does not apply to kind {kind!r}"
+                 + (" (reduce_scatter always sums)"
+                    if kind == "reduce_scatter" else ""))
+        _require(kind == "allgatherv" or sizes is None,
+                 f"sizes= only applies to allgatherv, not {kind!r}")
+        root_key = int(root) if rooted else 0
+        op_key = op if reducing else None
+        sizes_key = _canon_sizes(spec, sizes) if kind == "allgatherv" else None
+        # Resolve the block count up front (pure host work, also the
+        # payload-shape validation) so n_blocks=None and an explicit
+        # n_blocks equal to the cost-model optimum key the same entry --
+        # one shard_map trace and one XLA executor, not two.
+        n = self._resolve_n(kind, spec, n_blocks, sizes_key)
+        key = ("commplan", self.mesh, self.axis_name, self.backend,
+               self.model, kind, spec, n, root_key, op_key, sizes_key)
+        return cached_plan(key, lambda: self._build(
+            kind, spec, n, root_key, op_key, sizes_key))
+
+    def _resolve_n(self, kind: str, spec: PayloadSpec,
+                   n_blocks: Optional[int], sizes_canon) -> int:
+        p = self.p
+        if p == 1:
+            # The fast path skips payload-shape validation (matching the
+            # legacy collectives); sizes lengths ARE still checked, so
+            # single-device development catches a wrong-length sizes
+            # list before it ships to a real mesh.
+            if kind == "allgatherv":
+                for sizes in sizes_canon:
+                    _require(len(sizes) == p,
+                             f"sizes must have length p={p}, "
+                             f"got {len(sizes)}")
+            return n_blocks or 1
+        if kind == "broadcast":
+            return _resolve_broadcast(spec, p, n_blocks, self.model,
+                                      optimal_num_blocks_bcast)
+        if kind == "allgather":
+            return _resolve_allgather(spec, p, n_blocks, self.model)
+        if kind == "allgatherv":
+            return _resolve_allgatherv(spec, p, n_blocks, self.model,
+                                       sizes_canon)
+        if kind == "reduce_scatter":
+            return _resolve_reduce_scatter(spec, p, n_blocks, self.model)
+        # reduce / allreduce
+        return _resolve_broadcast(spec, p, n_blocks, self.model,
+                                  optimal_num_blocks_reduce)
+
+    def _build(self, kind: str, spec: PayloadSpec, n: int,
+               root: int, op: Optional[str],
+               sizes_canon) -> CollectivePlan:
+        p = self.p
+        if op is not None:
+            # Validate the op name host-side, before any tracing; the
+            # registry is shared with the kernels so identities agree.
+            from repro.kernels.reduce_ops import op_identity
+
+            op_identity(op, np.float32)
+        if p == 1:
+            # Fast path: nothing moves on a one-rank axis; the plan is
+            # the identity.
+            return CollectivePlan(
+                kind=kind, spec=spec, p=p, root=0, op=op,
+                n_blocks=n, rounds=0, backend=self.backend,
+                axis_name=self.axis_name, _execute=None)
+
+        bundle = get_bundle(p, root)
+        mesh, axis = self.mesh, self.axis_name
+        if kind == "broadcast":
+            ex = _lower_broadcast(mesh, axis, bundle, n, root, self.backend,
+                                  spec)
+            rounds = bundle.rounds(n)
+        elif kind == "allgather":
+            ex = _lower_allgather(mesh, axis, bundle, n, self.backend, spec)
+            rounds = bundle.rounds(n)
+        elif kind == "allgatherv":
+            ex = _lower_allgatherv(mesh, axis, bundle, n, self.backend, spec,
+                                   sizes_canon)
+            rounds = bundle.rounds(n)
+        elif kind == "reduce_scatter":
+            ex = _lower_reduce_scatter(mesh, axis, bundle, n, self.backend,
+                                       spec)
+            rounds = bundle.rounds(n)
+        elif kind == "reduce":
+            ex = _lower_reduce(mesh, axis, bundle, n, root, op, self.backend,
+                               spec)
+            rounds = bundle.rounds(n)
+        else:  # allreduce: reversed reduce then forward broadcast, one n
+            red = _lower_reduce(mesh, axis, bundle, n, root, op, self.backend,
+                                spec)
+            bcast = _lower_broadcast(mesh, axis, bundle, n, root,
+                                     self.backend, spec)
+            ex = lambda payload: bcast(red(payload))  # noqa: E731
+            rounds = bundle.allreduce_rounds(n)
+        return CollectivePlan(
+            kind=kind, spec=spec, p=p, root=root, op=op, n_blocks=n,
+            rounds=rounds, backend=self.backend, axis_name=self.axis_name,
+            _execute=jax.jit(ex))
+
+    # ------------------------------------------------ collective shorthands
+    #
+    # Thin plan-cache lookups: spec from the payload, cached plan, call.
+
+    def broadcast(self, x: Any, *, n_blocks: Optional[int] = None,
+                  root: int = 0) -> Any:
+        """Root's slices reach every rank in ``n-1+ceil(log2 p)`` rounds."""
+        return self.plan("broadcast", payload_spec(x), n_blocks=n_blocks,
+                         root=root)(x)
+
+    def allgather(self, x: Any, *, n_blocks: Optional[int] = None) -> Any:
+        """All-to-all broadcast of equal contributions; replicated out."""
+        return self.plan("allgather", payload_spec(x), n_blocks=n_blocks)(x)
+
+    def allgatherv(self, x: Any, sizes: Any, *,
+                   n_blocks: Optional[int] = None) -> Any:
+        """Irregular allgather; ``sizes`` is one per-rank list (shared by
+        all leaves) or a pytree of per-rank lists matching ``x``."""
+        return self.plan("allgatherv", payload_spec(x), n_blocks=n_blocks,
+                         sizes=sizes)(x)
+
+    def reduce_scatter(self, x: Any, *,
+                       n_blocks: Optional[int] = None) -> Any:
+        """Time-reversed all-to-all broadcast: summed shards, scattered."""
+        return self.plan("reduce_scatter", payload_spec(x),
+                         n_blocks=n_blocks)(x)
+
+    def reduce(self, x: Any, *, n_blocks: Optional[int] = None, root: int = 0,
+               op: str = "sum") -> Any:
+        """Op-reduction to ``root`` on the reversed schedule."""
+        return self.plan("reduce", payload_spec(x), n_blocks=n_blocks,
+                         root=root, op=op)(x)
+
+    def allreduce(self, x: Any, *, n_blocks: Optional[int] = None,
+                  root: int = 0, op: str = "sum") -> Any:
+        """Reduce + broadcast composition, ``2(n-1)+2*ceil(log2 p)``."""
+        return self.plan("allreduce", payload_spec(x), n_blocks=n_blocks,
+                         root=root, op=op)(x)
+
+    def allbroadcast(self, x: Any, *, n_blocks: Optional[int] = None) -> Any:
+        """Family name for the all-to-all broadcast (same plan)."""
+        return self.plan("allbroadcast", payload_spec(x),
+                         n_blocks=n_blocks)(x)
+
+
+def get_comm(mesh: Mesh, axis_name: str, *, backend: str = "jnp",
+             model: CommModel = DEFAULT_MODEL) -> CirculantComm:
+    """The process-cached :class:`CirculantComm` for this context.
+
+    Identity is stable while cached (``get_comm(...) is get_comm(...)``
+    for equal arguments), so the legacy ``circulant_*`` shims hit the
+    same plan cache as first-class communicator users.
+    """
+    return cached_plan(
+        ("comm", mesh, axis_name, backend, model),
+        lambda: CirculantComm(mesh=mesh, axis_name=axis_name,
+                              backend=backend, model=model))
+
+
+# ----------------------------------------------------- host data plans
+#
+# Single-process executions of the full collectives with the R rows of
+# the batched kernels standing in for the p ranks and the network
+# exchange realized as a row rotation (ppermute's rotation r -> (r+s)%p
+# is exactly jnp.roll along the rank axis).  The simulator runs these
+# next to its message-passing reference and asserts bit-exact agreement
+# -- the certification path for the Pallas backend on CPU CI.  Plans
+# are cached like their device siblings: slot tables and the step
+# handle are resolved once per (kind, p, n, root, op, backend).
+
+
+def _as_blocks(values: np.ndarray, lead: int) -> np.ndarray:
+    """Normalize payload values to [*lead_shape, n, bs] float/int blocks."""
+    arr = np.asarray(values)
+    return arr.reshape(arr.shape[: lead + 1] + (-1,)) if arr.ndim > lead + 1 \
+        else arr.reshape(arr.shape[: lead + 1] + (1,))
+
+
+def _x64():
+    """Certification runs in the values' own precision: without this,
+    ``jnp.asarray`` silently downcasts the reference's int64/float64
+    payloads and "bit-exact" would be vacuous (or int32-overflow wrong).
+    """
+    from jax.experimental import enable_x64
+
+    return enable_x64()
+
+
+@dataclass(frozen=True, eq=False)
+class HostDataPlan:
+    """Precomputed host-side data-plane execution (the certification
+    harness): slot tables, skip sequence and round-step handle resolved
+    at plan time; ``run(values)`` executes only the rounds."""
+
+    kind: str
+    p: int
+    n: int
+    root: int
+    op: Optional[str]
+    backend: str
+    slots: Tuple[np.ndarray, ...] = field(repr=False)
+    ks: np.ndarray = field(repr=False)
+    skips: Tuple[int, ...] = field(repr=False)
+    step: Any = field(repr=False)
+
+    def run(self, values: np.ndarray) -> np.ndarray:
+        if self.kind == "broadcast":
+            return self._run_broadcast(values)
+        if self.kind == "allgather":
+            return self._run_allgather(values)
+        return self._run_reduce(values)
+
+    def _run_broadcast(self, values: np.ndarray) -> np.ndarray:
+        """``values``: [n] (or [n, bs]) block payloads at the root ->
+        final [p, n, bs] data slots of every rank."""
+        p, n = self.p, self.n
+        recv_slots, send_slots = self.slots
+        vals = _as_blocks(values, 0)                 # [n, bs]
+        buf = np.zeros((p, n + 1, vals.shape[-1]), vals.dtype)
+        buf[self.root, :n] = vals
+        R = len(self.ks)
+        with _x64():
+            buf = jnp.asarray(buf)
+            msg = self.step.pack(buf, jnp.asarray(send_slots[0]))
+            for t in range(R):
+                got = jnp.roll(msg, self.skips[t], axis=0)
+                if t + 1 < R:
+                    buf, msg = self.step.shuffle(
+                        buf, got, jnp.asarray(recv_slots[t]),
+                        jnp.asarray(send_slots[t + 1]))
+                else:
+                    buf = self.step.unpack(buf, got,
+                                           jnp.asarray(recv_slots[t]))
+            return np.asarray(buf)[:, :n]
+
+    def _run_allgather(self, values: np.ndarray) -> np.ndarray:
+        """``values``: [p, n(, bs)] per-root payloads -> final
+        [p_rank, p_root, n, bs] data slots (rank-major kernel rows)."""
+        p, n = self.p, self.n
+        (recv_slots,) = self.slots
+        vals = _as_blocks(values, 1)                 # [p, n, bs]
+        bs = vals.shape[-1]
+        buf = np.zeros((p, p, n + 1, bs), vals.dtype)
+        for j in range(p):
+            buf[j, j, :n] = vals[j]
+        base = (np.arange(p)[:, None] - np.arange(p)[None, :]) % p
+        R = len(self.ks)
+
+        def slots(t, shift):
+            return jnp.asarray(recv_slots[t][(base + shift) % p].reshape(-1))
+
+        with _x64():
+            buf = jnp.asarray(buf.reshape(p * p, n + 1, bs))
+            msg = self.step.pack(buf, slots(0, self.skips[0]))
+            for t in range(R):
+                sk = self.skips[t]
+                got = jnp.roll(msg.reshape(p, p, bs), sk,
+                               axis=0).reshape(p * p, bs)
+                if t + 1 < R:
+                    buf, msg = self.step.shuffle(
+                        buf, got, slots(t, 0), slots(t + 1, self.skips[t + 1]))
+                else:
+                    buf = self.step.unpack(buf, got, slots(t, 0))
+            return np.asarray(buf).reshape(p, p, n + 1, bs)[:, :, :n]
+
+    def _run_reduce(self, values: np.ndarray) -> np.ndarray:
+        """``values``: [p, n(, bs)] per-rank contributions -> final
+        [p, n, bs] data slots (row ``root`` holds the op-reduction)."""
+        from repro.kernels.reduce_ops import op_identity
+
+        p, n = self.p, self.n
+        fwd_slots, acc_slots = self.slots
+        vals = _as_blocks(values, 1)                 # [p, n, bs]
+        bs = vals.shape[-1]
+        ident = op_identity(self.op, vals.dtype)
+        npbuf = np.concatenate(
+            [vals, np.zeros((p, 1, bs), vals.dtype),         # garbage slot n
+             np.full((p, 1, bs), ident, vals.dtype)], axis=1)  # identity n+1
+        R = len(self.ks)
+        with _x64():
+            buf = jnp.asarray(npbuf)
+            garbage = jnp.full((p,), n, jnp.int32)
+            # Initial capture+drain of round 0's forwarded partials (the
+            # acc part folds a zero message into the garbage slot).
+            buf, msg = self.step.acc_shuffle(
+                buf, jnp.zeros((p, bs), buf.dtype), garbage,
+                jnp.asarray(fwd_slots[0]), op=self.op)
+            for t in range(R):
+                got = jnp.roll(msg, -self.skips[t], axis=0)
+                nxt = (jnp.asarray(fwd_slots[t + 1]) if t + 1 < R
+                       else garbage)
+                buf, msg = self.step.acc_shuffle(
+                    buf, got, jnp.asarray(acc_slots[t]), nxt, op=self.op)
+            return np.asarray(buf)[:, :n]
+
+
+def host_plan(kind: str, p: int, n: int, *, root: int = 0, op: str = "sum",
+              backend: str = "jnp",
+              interpret: Optional[bool] = None) -> HostDataPlan:
+    """The cached :class:`HostDataPlan` for a certification execution.
+
+    ``kind``: ``"broadcast"``, ``"allgather"`` or ``"reduce"``.  Equal
+    arguments return the identical plan object; ``run(values)`` then
+    does no schedule or slot-table work.
+    """
+    if kind not in ("broadcast", "allgather", "reduce"):
+        raise ValueError(f"unknown host data-plane kind {kind!r}")
+    root_key = int(root) if kind != "allgather" else 0
+    op_key = op if kind == "reduce" else None
+    key = ("hostplan", kind, int(p), int(n), root_key, op_key, backend,
+           interpret)
+
+    def build():
+        bundle = get_bundle(p, root_key)
+        if kind == "reduce":
+            fwd, acc, ks = reduce_slot_plan(bundle, n)
+            slots = (fwd, acc)
+        else:
+            recv, send, ks = broadcast_slot_plan(bundle, n)
+            slots = (recv, send) if kind == "broadcast" else (recv,)
+        skips = tuple(int(bundle.skip[int(k)]) for k in ks)
+        return HostDataPlan(
+            kind=kind, p=int(p), n=int(n), root=root_key, op=op_key,
+            backend=backend, slots=slots, ks=ks, skips=skips,
+            step=get_round_step(backend, interpret))
+
+    return cached_plan(key, build)

@@ -20,6 +20,7 @@ from .schedule import ceil_log2
 
 __all__ = [
     "CommModel",
+    "DEFAULT_MODEL",
     "bcast_circulant_cost",
     "bcast_binomial_cost",
     "bcast_scatter_allgather_cost",
@@ -41,13 +42,24 @@ __all__ = [
 
 @dataclass(frozen=True)
 class CommModel:
-    """alpha: per-message latency (s); beta: per-byte time (s/byte)."""
+    """alpha: per-message latency (s); beta: per-byte time (s/byte).
+
+    Frozen (immutable) and hashable by value, so a model is a valid
+    component of process-wide plan-cache keys (repro.core.comm) and the
+    shared signature default below is provably never mutated.
+    """
 
     alpha: float = 1e-6
     beta: float = 1.0 / 50e9  # ~50 GB/s link
 
     def msg(self, nbytes: float) -> float:
         return self.alpha + self.beta * nbytes
+
+
+#: The one module-level default every collective signature shares.
+#: ``CommModel`` is frozen, so exposing a single instance is safe -- and
+#: it makes ``model=DEFAULT_MODEL`` calls hit the same plan-cache entry.
+DEFAULT_MODEL = CommModel()
 
 
 def bcast_circulant_cost(p: int, m: float, n: int, model: CommModel) -> float:

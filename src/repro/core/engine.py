@@ -38,7 +38,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property, lru_cache
-from typing import List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import numpy as np
 
@@ -56,6 +56,9 @@ __all__ = [
     "baseblock_table",
     "bundle_cache_clear",
     "bundle_cache_info",
+    "cached_plan",
+    "plan_cache_clear",
+    "plan_cache_info",
 ]
 
 
@@ -390,3 +393,47 @@ def bundle_cache_clear() -> None:
 def bundle_cache_info():
     """(bundle, tables) functools cache statistics."""
     return _get_bundle.cache_info(), _tables0.cache_info()
+
+
+# ------------------------------------------------------------ plan cache
+#
+# Spec-keyed plan cache alongside the bundle cache.  The bundle cache
+# stores the O(p log p) schedule *tables*; this one stores everything a
+# consumer derives from them for a concrete operation spec -- clamped
+# per-round slot tables (repro.core.roundstep), host data-plane plans
+# and device CollectivePlans (repro.core.comm).  One process-wide store
+# gives the same identity contract as get_bundle: planning twice with
+# the same key returns the same object, and the derived work (slot
+# clamping, jit-executor construction) is paid once per process.
+
+_plan_cache: Dict[Any, Any] = {}
+_plan_stats = {"hits": 0, "misses": 0}
+
+
+def cached_plan(key: Any, build: Callable[[], Any]) -> Any:
+    """Return the cached plan for ``key``, building it on first use.
+
+    ``key`` must be hashable and fully determine ``build()``'s result
+    (include p, root, n, kind, backend, payload spec, ... as needed).
+    Identity is stable while cached: two lookups with equal keys return
+    the *same* object, so plans may be compared with ``is``.
+    """
+    try:
+        val = _plan_cache[key]
+        _plan_stats["hits"] += 1
+        return val
+    except KeyError:
+        pass
+    _plan_stats["misses"] += 1
+    return _plan_cache.setdefault(key, build())
+
+
+def plan_cache_clear() -> None:
+    """Drop every cached plan (benchmarks measure cold planning paths)."""
+    _plan_cache.clear()
+    _plan_stats["hits"] = _plan_stats["misses"] = 0
+
+
+def plan_cache_info() -> Dict[str, int]:
+    """{'size', 'hits', 'misses'} statistics of the plan cache."""
+    return {"size": len(_plan_cache), **_plan_stats}

@@ -49,6 +49,7 @@ __all__ = [
     "clamp_slots",
     "broadcast_slot_plan",
     "reduce_slot_plan",
+    "scatter_slot_plan",
     "dataplane_broadcast",
     "dataplane_allgather",
     "dataplane_reduce",
@@ -58,6 +59,13 @@ BACKENDS = ("jnp", "pallas")
 
 
 # ------------------------------------------------------------ slot plans
+#
+# Slot plans are cached process-wide in the engine's spec-keyed plan
+# cache (keyed on (p, root, n) -- bundles are themselves cached, so the
+# bundle identity is implied by the key).  The returned arrays are
+# immutable and shared: a CollectivePlan holds them for its lifetime,
+# and repeated per-call lowering (the legacy circulant_* path) pays the
+# clamping exactly once per process.
 
 
 def clamp_slots(eff: np.ndarray, n: int, garbage: Optional[int] = None) -> np.ndarray:
@@ -68,15 +76,27 @@ def clamp_slots(eff: np.ndarray, n: int, garbage: Optional[int] = None) -> np.nd
     return np.where(eff < 0, g, np.minimum(eff, n - 1)).astype(np.int32)
 
 
+def _frozen(*arrays: np.ndarray) -> Tuple[np.ndarray, ...]:
+    for a in arrays:
+        a.setflags(write=False)
+    return arrays
+
+
 def broadcast_slot_plan(bundle, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """(recv_slots, send_slots, ks): clamped [R, p] forward slot tables.
 
     Row t is the slot column of forward round t; buffers carry ``n+1``
     slots with slot ``n`` the garbage slot (Correctness Condition 1
     guarantees sender and receiver address garbage in the same rounds).
+    Cached process-wide; the returned arrays are immutable and shared.
     """
-    recv_eff, send_eff, ks = bundle.per_round_tables(n)
-    return clamp_slots(recv_eff, n), clamp_slots(send_eff, n), ks
+    from .engine import cached_plan
+
+    def build():
+        recv_eff, send_eff, ks = bundle.per_round_tables(n)
+        return _frozen(clamp_slots(recv_eff, n), clamp_slots(send_eff, n), ks)
+
+    return cached_plan(("slots/bcast", bundle.p, bundle.root, int(n)), build)
 
 
 def reduce_slot_plan(bundle, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -87,12 +107,31 @@ def reduce_slot_plan(bundle, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray
     never forwards a partial (forward rounds never send TO the root, so
     reversed rounds never send FROM it) -- its fwd column is pinned to
     the identity slot, so capped final-phase entries ship the identity
-    instead of a live partial.
+    instead of a live partial.  Cached process-wide; immutable arrays.
     """
-    fwd_eff, acc_eff, ks = bundle.reversed_per_round_tables(n)
-    fwd = clamp_slots(fwd_eff, n)
-    fwd[:, bundle.root] = n + 1
-    return fwd, clamp_slots(acc_eff, n), ks
+    from .engine import cached_plan
+
+    def build():
+        fwd_eff, acc_eff, ks = bundle.reversed_per_round_tables(n)
+        fwd = clamp_slots(fwd_eff, n)
+        fwd[:, bundle.root] = n + 1
+        return _frozen(fwd, clamp_slots(acc_eff, n), ks)
+
+    return cached_plan(("slots/reduce", bundle.p, bundle.root, int(n)), build)
+
+
+def scatter_slot_plan(bundle, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(fwd_slots, acc_slots, ks): clamped reversed tables *without* the
+    root identity-slot pinning -- the reduce-scatter form, where capped
+    final-phase entries are real deliveries routed by drain-after-send
+    (buffers carry ``n+1`` slots, slot ``n`` garbage).  Cached."""
+    from .engine import cached_plan
+
+    def build():
+        fwd_eff, acc_eff, ks = bundle.reversed_per_round_tables(n)
+        return _frozen(clamp_slots(fwd_eff, n), clamp_slots(acc_eff, n), ks)
+
+    return cached_plan(("slots/scatter", bundle.p, bundle.root, int(n)), build)
 
 
 # ------------------------------------------------------------- interface
@@ -208,18 +247,30 @@ class PallasRoundStep(RoundStep):
                                     interpret=self.interpret)
 
 
+_step_handles = {}
+
+
 def get_round_step(backend: str = "jnp",
                    interpret: Optional[bool] = None) -> RoundStep:
     """Round-step backend factory: ``"jnp"`` (portable reference) or
     ``"pallas"`` (fused kernels; ``interpret`` as in
-    :func:`repro.kernels.ops.resolve_interpret`)."""
-    if backend == "jnp":
-        return JnpRoundStep()
-    if backend == "pallas":
-        return PallasRoundStep(interpret)
-    raise ValueError(
-        f"unknown round-step backend {backend!r} (use one of {BACKENDS})"
-    )
+    :func:`repro.kernels.ops.resolve_interpret`).
+
+    Handles are stateless and cached per ``(backend, interpret)``, so a
+    plan (repro.core.comm) owns the same shared step instance its
+    sibling plans use -- no per-call construction or platform sniffing.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown round-step backend {backend!r} (use one of {BACKENDS})"
+        )
+    key = (backend, interpret)
+    step = _step_handles.get(key)
+    if step is None:
+        step = (JnpRoundStep() if backend == "jnp"
+                else PallasRoundStep(interpret))
+        _step_handles[key] = step
+    return step
 
 
 # --------------------------------------------- host data-plane executors
@@ -230,23 +281,10 @@ def get_round_step(backend: str = "jnp",
 # is exactly jnp.roll along the rank axis).  The simulator runs these
 # next to its message-passing reference and asserts bit-exact agreement
 # -- the certification path for the Pallas backend on CPU CI.
-
-
-def _as_blocks(values: np.ndarray, lead: int) -> np.ndarray:
-    """Normalize payload values to [*lead_shape, n, bs] float/int blocks."""
-    arr = np.asarray(values)
-    return arr.reshape(arr.shape[: lead + 1] + (-1,)) if arr.ndim > lead + 1 \
-        else arr.reshape(arr.shape[: lead + 1] + (1,))
-
-
-def _x64():
-    """Certification runs in the values' own precision: without this,
-    ``jnp.asarray`` silently downcasts the reference's int64/float64
-    payloads and "bit-exact" would be vacuous (or int32-overflow wrong).
-    """
-    from jax.experimental import enable_x64
-
-    return enable_x64()
+#
+# The executors live on the cached host plans of :mod:`repro.core.comm`
+# (slot tables + step handle precomputed once per (kind, p, n, root,
+# op, backend)); these wrappers keep the original one-shot entry points.
 
 
 def dataplane_broadcast(p: int, n: int, root: int, values: np.ndarray,
@@ -257,28 +295,10 @@ def dataplane_broadcast(p: int, n: int, root: int, values: np.ndarray,
     ``values``: [n] (or [n, bs]) block payloads at the root.  Returns
     the final [p, n, bs] data slots of every rank.
     """
-    import jax.numpy as jnp
+    from .comm import host_plan
 
-    from .engine import get_bundle
-
-    vals = _as_blocks(values, 0)                     # [n, bs]
-    bundle = get_bundle(p, root)
-    recv_slots, send_slots, ks = broadcast_slot_plan(bundle, n)
-    step = get_round_step(backend, interpret)
-    buf = np.zeros((p, n + 1, vals.shape[-1]), vals.dtype)
-    buf[root, :n] = vals
-    R = len(ks)
-    with _x64():
-        buf = jnp.asarray(buf)
-        msg = step.pack(buf, jnp.asarray(send_slots[0]))
-        for t in range(R):
-            got = jnp.roll(msg, bundle.skip[int(ks[t])], axis=0)
-            if t + 1 < R:
-                buf, msg = step.shuffle(buf, got, jnp.asarray(recv_slots[t]),
-                                        jnp.asarray(send_slots[t + 1]))
-            else:
-                buf = step.unpack(buf, got, jnp.asarray(recv_slots[t]))
-        return np.asarray(buf)[:, :n]
+    return host_plan("broadcast", p, n, root=root, backend=backend,
+                     interpret=interpret).run(values)
 
 
 def dataplane_allgather(p: int, n: int, values: np.ndarray, backend: str,
@@ -290,38 +310,10 @@ def dataplane_allgather(p: int, n: int, values: np.ndarray, backend: str,
     rows, so the exchange is a roll by ``skip * p`` flat rows.  Returns
     the final [p_rank, p_root, n, bs] data slots.
     """
-    import jax.numpy as jnp
+    from .comm import host_plan
 
-    from .engine import get_bundle
-
-    vals = _as_blocks(values, 1)                     # [p, n, bs]
-    bundle = get_bundle(p)
-    recv_slots, _, ks = broadcast_slot_plan(bundle, n)
-    step = get_round_step(backend, interpret)
-    bs = vals.shape[-1]
-    buf = np.zeros((p, p, n + 1, bs), vals.dtype)
-    for j in range(p):
-        buf[j, j, :n] = vals[j]
-    ranks = np.arange(p)[:, None]
-    roots = np.arange(p)[None, :]
-    base = (ranks - roots) % p                       # [p_rank, p_root]
-    R = len(ks)
-
-    def slots(t, shift):
-        return jnp.asarray(recv_slots[t][(base + shift) % p].reshape(-1))
-
-    with _x64():
-        buf = jnp.asarray(buf.reshape(p * p, n + 1, bs))
-        msg = step.pack(buf, slots(0, bundle.skip[int(ks[0])]))
-        for t in range(R):
-            sk = bundle.skip[int(ks[t])]
-            got = jnp.roll(msg.reshape(p, p, bs), sk, axis=0).reshape(p * p, bs)
-            if t + 1 < R:
-                buf, msg = step.shuffle(buf, got, slots(t, 0),
-                                        slots(t + 1, bundle.skip[int(ks[t + 1])]))
-            else:
-                buf = step.unpack(buf, got, slots(t, 0))
-        return np.asarray(buf).reshape(p, p, n + 1, bs)[:, :, :n]
+    return host_plan("allgather", p, n, backend=backend,
+                     interpret=interpret).run(values)
 
 
 def dataplane_reduce(p: int, n: int, root: int, values: np.ndarray, op: str,
@@ -333,33 +325,7 @@ def dataplane_reduce(p: int, n: int, root: int, values: np.ndarray, op: str,
     Returns the final [p, n, bs] data slots (row ``root`` holds the
     op-reduction; other rows are drained to the identity).
     """
-    import jax.numpy as jnp
+    from .comm import host_plan
 
-    from repro.kernels.reduce_ops import op_identity
-
-    from .engine import get_bundle
-
-    vals = _as_blocks(values, 1)                     # [p, n, bs]
-    bundle = get_bundle(p, root)
-    fwd_slots, acc_slots, ks = reduce_slot_plan(bundle, n)
-    step = get_round_step(backend, interpret)
-    bs = vals.shape[-1]
-    ident = op_identity(op, vals.dtype)
-    npbuf = np.concatenate(
-        [vals, np.zeros((p, 1, bs), vals.dtype),          # garbage slot n
-         np.full((p, 1, bs), ident, vals.dtype)], axis=1  # identity slot n+1
-    )
-    R = len(ks)
-    with _x64():
-        buf = jnp.asarray(npbuf)
-        garbage = jnp.full((p,), n, jnp.int32)
-        # Initial capture+drain of round 0's forwarded partials (the acc
-        # part folds a zero message into the garbage slot -- a no-op).
-        buf, msg = step.acc_shuffle(buf, jnp.zeros((p, bs), buf.dtype),
-                                    garbage, jnp.asarray(fwd_slots[0]), op=op)
-        for t in range(R):
-            got = jnp.roll(msg, -bundle.skip[int(ks[t])], axis=0)
-            nxt = jnp.asarray(fwd_slots[t + 1]) if t + 1 < R else garbage
-            buf, msg = step.acc_shuffle(buf, got, jnp.asarray(acc_slots[t]),
-                                        nxt, op=op)
-        return np.asarray(buf)[:, :n]
+    return host_plan("reduce", p, n, root=root, op=op, backend=backend,
+                     interpret=interpret).run(values)

@@ -16,7 +16,10 @@ simulated ranks batched onto the kernel rows and the network exchange
 realized as a row rotation -- and asserts that its final buffers match
 the message-passing reference **bit-exactly**.  This is how the Pallas
 (interpret-mode) kernels are certified against the NumPy reference on
-CPU CI without any devices.
+CPU CI without any devices.  Certification is routed through the cached
+host data plans of :mod:`repro.core.comm` (:func:`~repro.core.comm.
+host_plan`), so sweeping a (p, n, root, op, backend) grid resolves slot
+tables and step handles once per combination.
 """
 
 from __future__ import annotations
@@ -142,10 +145,10 @@ def simulate_broadcast(
             )
     assert res.rounds == res.optimal_rounds
     if backend is not None:
-        from .roundstep import dataplane_broadcast
+        from .comm import host_plan
 
         vals = np.asarray(pay)
-        got = dataplane_broadcast(p, n, root, vals, backend)
+        got = host_plan("broadcast", p, n, root=root, backend=backend).run(vals)
         expect = got[root]  # reference payloads in data-plane block shape
         assert np.array_equal(expect.reshape(vals.shape), vals)
         for r in range(p):
@@ -250,11 +253,11 @@ def simulate_allgather(
                 )
     assert res.rounds == res.optimal_rounds
     if backend is not None:
-        from .roundstep import dataplane_allgather
+        from .comm import host_plan
 
         # Distinct (root, block) payload values, delivered everywhere.
         vals = np.arange(p * n, dtype=np.int64).reshape(p, n) * 7 + 3
-        got = dataplane_allgather(p, n, vals, backend)
+        got = host_plan("allgather", p, n, backend=backend).run(vals)
         for r in range(p):
             assert np.array_equal(got[r].reshape(p, n), vals), (
                 f"p={p} n={n}: {backend} data plane diverged from the "
@@ -392,9 +395,10 @@ def simulate_reduce(
             )
     assert res.rounds == res.optimal_rounds
     if backend is not None:
-        from .roundstep import dataplane_reduce
+        from .comm import host_plan
 
-        got = dataplane_reduce(p, n, root, values, op, backend)
+        got = host_plan("reduce", p, n, root=root, op=op,
+                        backend=backend).run(values)
         ref_root = np.stack([np.asarray(vals[root][j]) for j in range(n)])
         assert np.array_equal(got[root].reshape(ref_root.shape), ref_root), (
             f"p={p} n={n} root={root} op={op}: {backend} data plane "

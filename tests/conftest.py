@@ -1,0 +1,37 @@
+"""Shared test helpers.
+
+``run_worker`` launches tests/mp_worker.py in a subprocess with a
+forced p-device host platform, so the main pytest process keeps its
+single-device view (required for the smoke tests).  Both the collective
+suite (test_collectives.py) and the communicator suite (test_comm.py)
+use it; keeping it here means the invocation protocol (env flags,
+SKIP handling, timeout) cannot diverge between them.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+WORKER = os.path.join(ROOT, "tests", "mp_worker.py")
+
+
+def run_worker(what: str, p: int, backend: str = "jnp"):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    env["JAX_PLATFORMS"] = "cpu"
+    res = subprocess.run(
+        [sys.executable, WORKER, what, str(p), backend],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=900,
+    )
+    assert res.returncode == 0, f"worker failed:\n{res.stdout}\n{res.stderr}"
+    if "SKIP" in res.stdout:
+        pytest.skip(res.stdout.strip().splitlines()[-1])
+    assert "ALL OK" in res.stdout

@@ -8,34 +8,11 @@ fast lane runs ``pytest -q -m "not multidevice"``.  When the worker
 cannot get p devices (a backend ignoring the forcing flag), it reports
 SKIP and the test skips gracefully."""
 
-import os
-import subprocess
-import sys
-
 import pytest
 
+from conftest import run_worker
+
 pytestmark = pytest.mark.multidevice
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-WORKER = os.path.join(ROOT, "tests", "mp_worker.py")
-
-
-def run_worker(what: str, p: int, backend: str = "jnp"):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get("PYTHONPATH", "")
-    env["JAX_PLATFORMS"] = "cpu"
-    res = subprocess.run(
-        [sys.executable, WORKER, what, str(p), backend],
-        capture_output=True,
-        text=True,
-        env=env,
-        timeout=900,
-    )
-    assert res.returncode == 0, f"worker failed:\n{res.stdout}\n{res.stderr}"
-    if "SKIP" in res.stdout:
-        pytest.skip(res.stdout.strip().splitlines()[-1])
-    assert "ALL OK" in res.stdout
 
 
 @pytest.mark.parametrize("p", [2, 5, 8])
