@@ -1,0 +1,98 @@
+"""Hierarchical (two-level) collective benchmark: flat vs composed cost
+on the paper's 36x32 evaluation topology, plus plan-machinery timings.
+
+    PYTHONPATH=src python -m benchmarks.run hier
+
+Two sections, CSV rows:
+
+  * ``hier_cost``: modeled alpha-beta cost of the flat circulant
+    collective over p = nodes*cores (every hop priced at the inter-node
+    link) vs the two-level composition (inter hops at the slow model,
+    intra hops at the fast model), each at its own optimal block
+    count -- the quantitative case for the hierarchy on asymmetric
+    fabrics.
+  * ``hier_plan``: cold vs cached hierarchical host-plan construction
+    and the certified 36x32 simulator sweep timing (the CI budget
+    guard for the paper-topology certification tests).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.comm_bench import _median
+
+
+def cost_rows():
+    from repro.core.costmodel import (
+        CommModel,
+        bcast_circulant_cost,
+        hier_cost,
+        optimal_hier_blocks,
+        optimal_num_blocks_bcast,
+    )
+
+    # Asymmetric fabric: inter-node ~ IB-ish latency/bandwidth, the
+    # intra-node link an order of magnitude cheaper on both terms.
+    inter = CommModel(alpha=2e-6, beta=1.0 / 12.5e9)
+    intra = CommModel(alpha=2e-7, beta=1.0 / 200e9)
+    nodes, cores = 36, 32
+    p = nodes * cores
+    print("name,nodes,cores,m_bytes,flat_n,flat_cost_us,"
+          "hier_n_inter,hier_n_intra,hier_cost_us,speedup")
+    for mexp in (12, 16, 20, 24):
+        m = float(1 << mexp)
+        nf = optimal_num_blocks_bcast(p, m, inter)
+        flat = bcast_circulant_cost(p, m, nf, inter)
+        nN, nC = optimal_hier_blocks(nodes, cores, m, m, inter, intra)
+        hier = hier_cost("broadcast", nodes, cores, m, m, nN, nC,
+                         inter, intra)
+        print(f"hier_cost_bcast,{nodes},{cores},{int(m)},{nf},"
+              f"{flat*1e6:.2f},{nN},{nC},{hier*1e6:.2f},"
+              f"{flat/hier:.2f}")
+        hier2 = hier_cost("allreduce", nodes, cores, m, m, nN, nC,
+                          inter, intra)
+        flat2 = 2 * flat
+        print(f"hier_cost_allreduce,{nodes},{cores},{int(m)},{nf},"
+              f"{flat2*1e6:.2f},{nN},{nC},{hier2*1e6:.2f},"
+              f"{flat2/hier2:.2f}")
+
+
+def plan_rows():
+    from repro.core.engine import plan_cache_clear
+    from repro.core.hier import hier_host_plan
+
+    print("name,nodes,cores,n_inter,n_intra,value")
+    plan_cache_clear()
+    t0 = time.perf_counter()
+    hier_host_plan("broadcast", 36, 32, 4, 3)
+    cold = (time.perf_counter() - t0) * 1e3
+    times = []
+    for _ in range(200):
+        t0 = time.perf_counter()
+        hier_host_plan("broadcast", 36, 32, 4, 3)
+        times.append((time.perf_counter() - t0) * 1e6)
+    print(f"hier_plan_cold_ms,36,32,4,3,{cold:.3f}")
+    print(f"hier_plan_cached_us,36,32,4,3,{_median(times):.2f}")
+
+    from repro.core import (
+        simulate_hier_allreduce,
+        simulate_hier_broadcast,
+        simulate_hier_reduce,
+    )
+
+    t0 = time.perf_counter()
+    simulate_hier_broadcast(36, 32, 3, 2, root=1127, backend="jnp")
+    simulate_hier_reduce(36, 32, 2, 2, root=100, backend="jnp")
+    simulate_hier_allreduce(36, 32, 2, 1, backend="jnp")
+    print(f"hier_sim36x32_certified_s,36,32,-,-,"
+          f"{time.perf_counter() - t0:.2f}")
+
+
+def main():
+    cost_rows()
+    plan_rows()
+
+
+if __name__ == "__main__":
+    main()

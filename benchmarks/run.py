@@ -52,6 +52,12 @@ def main() -> None:
 
         comm_bench.main()
 
+    if which in ("hier", "all"):
+        print("# === Hierarchical: flat vs two-level on the 36x32 topology ===")
+        from benchmarks import hier_bench
+
+        hier_bench.main()
+
     if which in ("roundstep", "all"):
         print("# === Round-step data plane: jnp vs pallas backends ===")
         from benchmarks import allreduce_bench, bcast_bench

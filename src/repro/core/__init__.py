@@ -5,17 +5,33 @@ all-broadcast, arXiv:2407.18004) on the same cached engine.
 Public API (see docs/api.md for the full reference):
     CirculantComm, CollectivePlan, get_comm (plan/execute communicator
     front-end with pytree payloads -- the preferred collective API)
+    HierComm, HierPlan, get_hier_comm, hier_rounds (the two-level
+    hierarchical layer over a nodes x cores mesh -- the paper's 36x32
+    evaluation topology)
     get_bundle, ScheduleBundle (the cached schedule engine)
     RoundStep, get_round_step (the pluggable per-round data plane)
     compute_skips, baseblock, recv_schedule, send_schedule, schedule_tables
     verify_schedules, verify_reversed_schedules, verify_bundle
     simulate_broadcast, simulate_allgather, simulate_allbroadcast,
-    simulate_reduce, simulate_allreduce (all take backend="jnp"|"pallas"
-    to certify the round-step data plane bit-exactly)
+    simulate_reduce, simulate_allreduce, simulate_hier_broadcast,
+    simulate_hier_reduce, simulate_hier_allreduce (all take
+    backend="jnp"|"pallas" to certify the round-step data plane
+    bit-exactly)
 """
 
 from .comm import CirculantComm, CollectivePlan, get_comm, payload_spec
 from .engine import ScheduleBundle, get_bundle
+from .hier import (
+    HierComm,
+    HierPlan,
+    get_hier_comm,
+    hier_allgather,
+    hier_allreduce,
+    hier_broadcast,
+    hier_host_plan,
+    hier_reduce,
+    hier_rounds,
+)
 from .roundstep import RoundStep, get_round_step
 from .schedule import (
     baseblock,
@@ -28,11 +44,15 @@ from .schedule import (
     virtual_rounds,
 )
 from .simulator import (
+    HierSimResult,
     SimResult,
     simulate_allbroadcast,
     simulate_allgather,
     simulate_allreduce,
     simulate_broadcast,
+    simulate_hier_allreduce,
+    simulate_hier_broadcast,
+    simulate_hier_reduce,
     simulate_reduce,
 )
 from .verify import (
@@ -47,6 +67,15 @@ __all__ = [
     "CollectivePlan",
     "get_comm",
     "payload_spec",
+    "HierComm",
+    "HierPlan",
+    "get_hier_comm",
+    "hier_broadcast",
+    "hier_reduce",
+    "hier_allreduce",
+    "hier_allgather",
+    "hier_host_plan",
+    "hier_rounds",
     "ScheduleBundle",
     "get_bundle",
     "RoundStep",
@@ -61,11 +90,15 @@ __all__ = [
     "send_schedule",
     "virtual_rounds",
     "SimResult",
+    "HierSimResult",
     "simulate_allbroadcast",
     "simulate_allgather",
     "simulate_allreduce",
     "simulate_broadcast",
     "simulate_reduce",
+    "simulate_hier_broadcast",
+    "simulate_hier_reduce",
+    "simulate_hier_allreduce",
     "verify_p",
     "verify_reversed_schedules",
     "verify_schedules",

@@ -46,6 +46,15 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .comm import _rot_perm, get_comm
 from .costmodel import DEFAULT_MODEL, CommModel
 from .engine import ScheduleBundle, get_bundle
+# Hierarchical (two-level) one-call entry points live in
+# repro.core.hier; re-exported here so the functional collective
+# surface stays one import for flat AND hierarchical call sites.
+from .hier import (  # noqa: F401  (re-exports)
+    hier_allgather,
+    hier_allreduce,
+    hier_broadcast,
+    hier_reduce,
+)
 from .jaxcompat import shard_map as _shard_map
 
 __all__ = [
@@ -55,6 +64,10 @@ __all__ = [
     "circulant_allbroadcast",
     "circulant_reduce",
     "circulant_allreduce",
+    "hier_broadcast",
+    "hier_reduce",
+    "hier_allreduce",
+    "hier_allgather",
     "ring_allgather",
     "CirculantTables",
     "build_tables",

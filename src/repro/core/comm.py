@@ -77,6 +77,7 @@ __all__ = [
     "KINDS",
     "PayloadSpec",
     "payload_spec",
+    "validate_payload",
     "CollectivePlan",
     "CirculantComm",
     "get_comm",
@@ -145,6 +146,30 @@ def payload_spec(payload: Any) -> PayloadSpec:
 # ------------------------------------------------------------ small helpers
 
 
+def validate_payload(spec: PayloadSpec, payload: Any) -> None:
+    """Assert ``payload`` matches ``spec`` (tree structure, per-leaf
+    shape and dtype) with a precise diagnostic.  Shared by every plan
+    front-end (:class:`CollectivePlan` here, ``HierPlan`` in
+    :mod:`repro.core.hier`), so the validation contract cannot diverge.
+    """
+    leaves, treedef = jax.tree.flatten(payload)
+    if treedef != spec.treedef:
+        raise ValueError(
+            f"payload tree {treedef} does not match the plan spec "
+            f"{spec.treedef}"
+        )
+    for i, (leaf, (shape, dtype)) in enumerate(zip(leaves, spec.leaves)):
+        if not hasattr(leaf, "shape") or not hasattr(leaf, "dtype"):
+            leaf = np.asarray(leaf)
+        got_shape = tuple(int(s) for s in leaf.shape)
+        got_dtype = np.dtype(leaf.dtype)
+        if got_shape != shape or got_dtype != dtype:
+            raise ValueError(
+                f"payload leaf {i} is {got_shape}:{got_dtype.name}, "
+                f"plan expects {shape}:{np.dtype(dtype).name}"
+            )
+
+
 def _rot_perm(p: int, s: int):
     """Static ppermute pairs for the rotation r -> (r + s) % p."""
     return [(r, (r + s) % p) for r in range(p)]
@@ -192,14 +217,121 @@ def _acc_dtype(dt: np.dtype):
     return dt
 
 
+# --------------------------------------------------------- phase bodies
+#
+# The per-collective round loops, factored as *phase* helpers on lists
+# of per-leaf flat vectors: each takes a rank index along ONE mesh axis
+# and runs that axis' rounds through the shared RoundStep backend,
+# looping leaves *inside* the round loop -- every round is one ppermute
+# per leaf on the same rotation, so all leaves ride one shared schedule
+# (the round count is the single-collective optimum regardless of tree
+# size).  The flat lowerings below wrap exactly one phase in a
+# one-axis shard_map; the hierarchical layer (repro.core.hier) chains
+# two of them along different axes inside one body -- ONE copy of each
+# round loop serves both.
+
+
+def _bcast_phase(flats, n, recv_slots, send_slots, perms, axis_name, r, step):
+    """Forward broadcast rounds along ``axis_name``; the root row holds
+    the data, every row ends holding all n blocks."""
+    recv_t = jnp.asarray(recv_slots)  # [R, p] static slot tables
+    send_t = jnp.asarray(send_slots)
+    R = recv_t.shape[0]
+    bufs, msgs, sizes = [], [], []
+    for flat in flats:
+        buf, _, _ = _split_blocks(flat, n)
+        buf = buf[None]                               # [1, n+1, bs]
+        bufs.append(buf)
+        sizes.append(flat.shape[0])
+        msgs.append(step.pack(buf, send_t[0, r][None]))
+    for t in range(R):
+        got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
+        for i in range(len(bufs)):
+            if t + 1 < R:
+                bufs[i], msgs[i] = step.shuffle(
+                    bufs[i], got[i], recv_t[t, r][None],
+                    send_t[t + 1, r][None])
+            else:
+                bufs[i] = step.unpack(bufs[i], got[i], recv_t[t, r][None])
+    return [buf[0, :n].reshape(-1)[:size]
+            for buf, size in zip(bufs, sizes)]
+
+
+def _reduce_phase(flats, n, fwd_slots, acc_slots, perms, axis_name, r,
+                  idents, op, step):
+    """Reversed (reduction) rounds along ``axis_name``; the root row
+    ends with the op-reduction, every other row is drained to the
+    identity."""
+    F = jnp.asarray(fwd_slots)  # [R, p] static slot tables (root row
+    A = jnp.asarray(acc_slots)  # pinned to the identity slot n+1)
+    R = F.shape[0]
+    garbage = jnp.full((1,), n, jnp.int32)
+    bufs, msgs, sizes = [], [], []
+    for flat, ident in zip(flats, idents):
+        buf, bs, _ = _split_blocks(flat, n)           # [n+1, bs]
+        buf = jnp.concatenate(
+            [buf, jnp.full((1, bs), ident, buf.dtype)], axis=0
+        )[None]                                       # [1, n+2, bs]
+        # Initial capture+drain of round 0's forwarded partial.
+        buf, msg = step.acc_shuffle(
+            buf, jnp.zeros((1, bs), buf.dtype), garbage, F[0, r][None], op=op)
+        bufs.append(buf)
+        msgs.append(msg)
+        sizes.append(flat.shape[0])
+    for t in range(R):
+        got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
+        nxt = F[t + 1, r][None] if t + 1 < R else garbage
+        for i in range(len(bufs)):
+            # accumulate round t's incoming partial, then capture+drain
+            # round t+1's forward (each partial flows along exactly one
+            # tree edge).
+            bufs[i], msgs[i] = step.acc_shuffle(
+                bufs[i], got[i], A[t, r][None], nxt, op=op)
+    return [buf[0, :n].reshape(-1)[:size]
+            for buf, size in zip(bufs, sizes)]
+
+
+def _allgather_phase(flats, n, recv_slots, skips, perms, axis_name, r,
+                     p, step):
+    """All-to-all broadcast rounds along ``axis_name``: every row
+    contributes its flat vector, every row ends with the [p * len]
+    rank-major concatenation.  One clamped [R, p] slot table serves
+    recv AND send: by Condition 2 the send slot of root row j is the
+    recv slot of the shifted virtual rank, so both are gathers of the
+    same table."""
+    S = jnp.asarray(recv_slots)  # [R, p] static slot table
+    R = S.shape[0]
+    base = (r - jnp.arange(p)) % p  # virtual rank of root row j at rank r
+
+    def send_slots_at(t):
+        return S[t][(base + skips[t]) % p]
+
+    bufs, sizes = [], []
+    for flat in flats:
+        # buffers[j] holds root j's blocks; only the own row is filled.
+        own, _, _ = _split_blocks(flat, n)            # [n+1, bs]
+        buf = jnp.zeros((p,) + own.shape, flat.dtype)
+        buf = jax.lax.dynamic_update_slice(buf, own[None], (r, 0, 0))
+        bufs.append(buf)
+        sizes.append(flat.shape[0])
+    msgs = [step.pack(buf, send_slots_at(0)) for buf in bufs]
+    for t in range(R):
+        got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
+        for i in range(len(bufs)):
+            if t + 1 < R:
+                bufs[i], msgs[i] = step.shuffle(
+                    bufs[i], got[i], S[t][base], send_slots_at(t + 1))
+            else:
+                bufs[i] = step.unpack(bufs[i], got[i], S[t][base])
+    return [buf[:, :n, :].reshape(p, -1)[:, :size].reshape(-1)
+            for buf, size in zip(bufs, sizes)]
+
+
 # ------------------------------------------------------- device lowerings
 #
-# One lowering per collective kind.  Each takes the static plan inputs
-# and returns ``execute(payload) -> payload`` built from a single
-# shard_map body that loops leaves *inside* the round loop: every round
-# is one ppermute per leaf on the same rotation, so all leaves ride one
-# shared schedule (the round count is the single-collective optimum
-# regardless of the tree size).
+# One lowering per collective kind: each wraps one phase helper (or a
+# bespoke loop for the irregular kinds) in a single one-axis shard_map
+# and returns ``execute(payload) -> payload``.
 
 
 def _lower_broadcast(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
@@ -208,35 +340,19 @@ def _lower_broadcast(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
     p = bundle.p
     recv_slots, send_slots, ks = broadcast_slot_plan(bundle, n)
     step = get_round_step(backend)
-    R = len(ks)
     perms = [_rot_perm(p, bundle.skip[int(k)]) for k in ks]
     L = spec.num_leaves
 
     def body(*shards):
         r = jax.lax.axis_index(axis_name)
-        recv_t = jnp.asarray(recv_slots)  # [R, p] static slot tables
-        send_t = jnp.asarray(send_slots)
-        bufs, msgs, meta = [], [], []
+        flats, shapes = [], []
         for xs in shards:
             flat = xs.reshape(-1)
-            buf, _, _ = _split_blocks(flat, n)
-            buf = jnp.where(r == root, buf, jnp.zeros_like(buf))[None]
-            bufs.append(buf)
-            meta.append((flat.shape[0], xs.shape))
-            msgs.append(step.pack(buf, send_t[0, r][None]))
-        for t in range(R):
-            got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
-            for i in range(L):
-                if t + 1 < R:
-                    bufs[i], msgs[i] = step.shuffle(
-                        bufs[i], got[i], recv_t[t, r][None],
-                        send_t[t + 1, r][None])
-                else:
-                    bufs[i] = step.unpack(bufs[i], got[i], recv_t[t, r][None])
-        return tuple(
-            buf[0, :n].reshape(-1)[:size].reshape(shape)
-            for buf, (size, shape) in zip(bufs, meta)
-        )
+            flats.append(jnp.where(r == root, flat, jnp.zeros_like(flat)))
+            shapes.append(xs.shape)
+        outs = _bcast_phase(flats, n, recv_slots, send_slots, perms,
+                            axis_name, r, step)
+        return tuple(f.reshape(shape) for f, shape in zip(outs, shapes))
 
     shard_fn = _shard_map(
         body,
@@ -253,47 +369,22 @@ def _lower_broadcast(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
 def _lower_allgather(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
                      n: int, backend: str, spec: PayloadSpec) -> Callable:
     p = bundle.p
-    # One clamped [R, p] slot table serves recv AND send: by Condition 2
-    # the send slot of root row j is the recv slot of the shifted
-    # virtual rank, so both are gathers of the same table.
     recv_slots, _, ks = broadcast_slot_plan(bundle, n)
     step = get_round_step(backend)
-    R = len(ks)
     perms = [_rot_perm(p, bundle.skip[int(k)]) for k in ks]
     skips = [int(bundle.skip[int(k)]) for k in ks]
     L = spec.num_leaves
 
     def body(*shards):
         r = jax.lax.axis_index(axis_name)
-        S = jnp.asarray(recv_slots)  # [R, p] static slot table
-        base = (r - jnp.arange(p)) % p  # virtual rank of root row j at rank r
-
-        def send_slots_at(t):
-            return S[t][(base + skips[t]) % p]
-
-        bufs, meta = [], []
-        for xs in shards:
-            # xs: this rank's shard; buffers[j] holds root j's blocks.
-            flat = xs.reshape(-1)
-            own, _, _ = _split_blocks(flat, n)  # [n+1, bs]
-            buf = jnp.zeros((p,) + own.shape, xs.dtype)
-            buf = jax.lax.dynamic_update_slice(buf, own[None], (r, 0, 0))
-            bufs.append(buf)
-            meta.append((flat.shape[0], xs.shape))
-        msgs = [step.pack(buf, send_slots_at(0)) for buf in bufs]
-        for t in range(R):
-            got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
-            for i in range(L):
-                if t + 1 < R:
-                    bufs[i], msgs[i] = step.shuffle(
-                        bufs[i], got[i], S[t][base], send_slots_at(t + 1))
-                else:
-                    bufs[i] = step.unpack(bufs[i], got[i], S[t][base])
-        outs = []
-        for buf, (size, shape) in zip(bufs, meta):
-            out = buf[:, :n, :].reshape(p, -1)[:, :size]
-            outs.append(out.reshape((p * shape[0],) + tuple(shape[1:])))
-        return tuple(outs)
+        flats = [xs.reshape(-1) for xs in shards]
+        shapes = [xs.shape for xs in shards]
+        outs = _allgather_phase(flats, n, recv_slots, skips, perms,
+                                axis_name, r, p, step)
+        return tuple(
+            f.reshape((p * shape[0],) + tuple(shape[1:]))
+            for f, shape in zip(outs, shapes)
+        )
 
     shard_fn = _shard_map(
         body,
@@ -381,44 +472,20 @@ def _lower_reduce(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
     p = bundle.p
     fwd_slots, acc_slots, ks = reduce_slot_plan(bundle, n)
     step = get_round_step(backend)
-    R = len(ks)
     perms = [_rot_perm(p, (p - bundle.skip[int(k)]) % p) for k in ks]
     idents = [op_identity(op, dt) for _, dt in spec.leaves]
     L = spec.num_leaves
 
     def body(*shards):
         r = jax.lax.axis_index(axis_name)
-        F = jnp.asarray(fwd_slots)  # [R, p] static slot tables (root row
-        A = jnp.asarray(acc_slots)  # pinned to the identity slot n+1)
-        garbage = jnp.full((1,), n, jnp.int32)
-        bufs, msgs, meta = [], [], []
-        for xs, ident in zip(shards, idents):
-            flat = xs.reshape(-1)
-            buf, bs, _ = _split_blocks(flat, n)       # [n+1, bs]
-            buf = jnp.concatenate(
-                [buf, jnp.full((1, bs), ident, buf.dtype)], axis=0
-            )[None]                                   # [1, n+2, bs]
-            # Initial capture+drain of round 0's forwarded partial.
-            buf, msg = step.acc_shuffle(
-                buf, jnp.zeros((1, bs), buf.dtype), garbage, F[0, r][None],
-                op=op)
-            bufs.append(buf)
-            msgs.append(msg)
-            meta.append((flat.shape[0], xs.shape))
-        for t in range(R):
-            got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
-            nxt = F[t + 1, r][None] if t + 1 < R else garbage
-            for i in range(L):
-                # accumulate round t's incoming partial, then capture+
-                # drain round t+1's forward (each partial flows along
-                # exactly one tree edge).
-                bufs[i], msgs[i] = step.acc_shuffle(
-                    bufs[i], got[i], A[t, r][None], nxt, op=op)
-        outs = []
-        for buf, (size, shape) in zip(bufs, meta):
-            out = buf[0, :n].reshape(-1)[:size].reshape(shape)
-            outs.append(jnp.where(r == root, out, jnp.zeros_like(out)))
-        return tuple(outs)
+        flats = [xs.reshape(-1) for xs in shards]
+        shapes = [xs.shape for xs in shards]
+        outs = _reduce_phase(flats, n, fwd_slots, acc_slots, perms,
+                             axis_name, r, idents, op, step)
+        return tuple(
+            jnp.where(r == root, f, jnp.zeros_like(f)).reshape(shape)
+            for f, shape in zip(outs, shapes)
+        )
 
     shard_fn = _shard_map(
         body,
@@ -518,23 +585,7 @@ class CollectivePlan:
     _execute: Optional[Callable] = field(repr=False, default=None)
 
     def __call__(self, payload: Any) -> Any:
-        leaves, treedef = jax.tree.flatten(payload)
-        if treedef != self.spec.treedef:
-            raise ValueError(
-                f"payload tree {treedef} does not match the plan spec "
-                f"{self.spec.treedef}"
-            )
-        for i, (leaf, (shape, dtype)) in enumerate(zip(leaves,
-                                                       self.spec.leaves)):
-            if not hasattr(leaf, "shape") or not hasattr(leaf, "dtype"):
-                leaf = np.asarray(leaf)
-            got_shape = tuple(int(s) for s in leaf.shape)
-            got_dtype = np.dtype(leaf.dtype)
-            if got_shape != shape or got_dtype != dtype:
-                raise ValueError(
-                    f"payload leaf {i} is {got_shape}:{got_dtype.name}, "
-                    f"plan expects {shape}:{np.dtype(dtype).name}"
-                )
+        validate_payload(self.spec, payload)
         if self._execute is None:  # p == 1 fast path: nothing moves
             return payload
         return self._execute(payload)

@@ -37,6 +37,8 @@ __all__ = [
     "optimal_num_blocks_allgather",
     "optimal_num_blocks_reduce",
     "optimal_num_blocks_allreduce",
+    "hier_cost",
+    "optimal_hier_blocks",
 ]
 
 
@@ -199,6 +201,79 @@ def optimal_num_blocks_allreduce(p: int, m: float, model: CommModel) -> int:
     phase -- the factor 2 scales the cost, not the argmin.
     """
     return optimal_num_blocks_bcast(p, m, model)
+
+
+# ----------------------- two-level (hierarchical) cost, paper evaluation
+#
+# The paper's 36x32 evaluation cluster has an order-of-magnitude gap
+# between intra-node and inter-node link costs; a flat circulant
+# schedule over p = nodes*cores prices every hop with one (alpha, beta).
+# The hierarchical composition (repro.core.hier) runs one circulant
+# collective per level, each under its own CommModel, so the two-level
+# cost is simply the sum of the per-level single-collective costs --
+# and because the levels pipeline nothing into each other, the block
+# counts decouple: each level's n* is the flat analytic optimum under
+# its own model and message volume.
+
+_HIER_KINDS = ("broadcast", "reduce", "allreduce", "allgather")
+
+
+def hier_cost(
+    kind: str,
+    p_inter: int,
+    p_intra: int,
+    m_inter: float,
+    m_intra: float,
+    n_inter: int,
+    n_intra: int,
+    inter_model: CommModel = DEFAULT_MODEL,
+    intra_model: CommModel = DEFAULT_MODEL,
+) -> float:
+    """Two-level cost of a hierarchical circulant collective.
+
+    ``m_inter`` / ``m_intra`` are the bytes each level moves (they can
+    differ: a hierarchical allgather's intra level only moves the node's
+    share).  Broadcast/reduce compose one phase per level; allreduce
+    composes both (reversed reduce + forward broadcast at each level);
+    allgather composes the two all-to-all broadcast phases.
+    """
+    if kind not in _HIER_KINDS:
+        raise ValueError(f"unknown hier kind {kind!r} (use one of {_HIER_KINDS})")
+    if kind == "allgather":
+        inter = allgather_circulant_cost(p_inter, m_inter, n_inter, inter_model)
+        intra = allgather_circulant_cost(p_intra, m_intra, n_intra, intra_model)
+    else:
+        inter = bcast_circulant_cost(p_inter, m_inter, n_inter, inter_model)
+        intra = bcast_circulant_cost(p_intra, m_intra, n_intra, intra_model)
+    scale = 2.0 if kind == "allreduce" else 1.0
+    return scale * (inter + intra)
+
+
+def optimal_hier_blocks(
+    p_inter: int,
+    p_intra: int,
+    m_inter: float,
+    m_intra: float,
+    inter_model: CommModel = DEFAULT_MODEL,
+    intra_model: CommModel = DEFAULT_MODEL,
+    kind: str = "broadcast",
+) -> "tuple[int, int]":
+    """Per-level optimal block counts ``(n_inter, n_intra)``.
+
+    The two-level cost is separable (no cross-level pipelining), so each
+    level takes its flat analytic optimum under its own model: the
+    broadcast/reduce/allreduce argmin ``sqrt((q-1) beta m / alpha)`` or
+    the allgather variant -- evaluated with the level's own (p, m).
+    """
+    if kind not in _HIER_KINDS:
+        raise ValueError(f"unknown hier kind {kind!r} (use one of {_HIER_KINDS})")
+    if kind == "allgather":
+        n_inter = optimal_num_blocks_allgather(p_inter, m_inter, inter_model)
+        n_intra = optimal_num_blocks_allgather(p_intra, m_intra, intra_model)
+    else:
+        n_inter = optimal_num_blocks_bcast(p_inter, m_inter, inter_model)
+        n_intra = optimal_num_blocks_bcast(p_intra, m_intra, intra_model)
+    return n_inter, n_intra
 
 
 def optimal_num_blocks_allgather(p: int, m: float, model: CommModel) -> int:

@@ -59,6 +59,7 @@ __all__ = [
     "cached_plan",
     "plan_cache_clear",
     "plan_cache_info",
+    "plan_cache_keys",
 ]
 
 
@@ -437,3 +438,17 @@ def plan_cache_clear() -> None:
 def plan_cache_info() -> Dict[str, int]:
     """{'size', 'hits', 'misses'} statistics of the plan cache."""
     return {"size": len(_plan_cache), **_plan_stats}
+
+
+def plan_cache_keys() -> Tuple[Any, ...]:
+    """Snapshot of the current plan-cache keys.
+
+    Every key is namespaced by its first element ("commplan",
+    "hierplan", "hostplan", "hierhostplan", "slots/...", "comm",
+    "hiercomm"), so mixed hierarchical and flat specs can never collide
+    -- the cache-audit tests assert this invariant over the snapshot.
+    The cache is eviction-free by design (plans are small and the key
+    space is bounded by distinct specs), so the snapshot is also how
+    tests certify that repeated planning does not grow it.
+    """
+    return tuple(_plan_cache.keys())

@@ -53,6 +53,10 @@ __all__ = [
     "dataplane_broadcast",
     "dataplane_allgather",
     "dataplane_reduce",
+    "dataplane_hier_broadcast",
+    "dataplane_hier_reduce",
+    "dataplane_hier_allreduce",
+    "dataplane_hier_allgather",
 ]
 
 BACKENDS = ("jnp", "pallas")
@@ -329,3 +333,58 @@ def dataplane_reduce(p: int, n: int, root: int, values: np.ndarray, op: str,
 
     return host_plan("reduce", p, n, root=root, op=op, backend=backend,
                      interpret=interpret).run(values)
+
+
+# The hierarchical (two-level) variants compose the flat host plans per
+# level (repro.core.hier.hier_host_plan); these wrappers keep the
+# one-shot entry-point shape of their flat siblings above.
+
+
+def dataplane_hier_broadcast(nodes: int, cores: int, n_inter: int,
+                             n_intra: int, root: int, values: np.ndarray,
+                             backend: str,
+                             interpret: Optional[bool] = None) -> np.ndarray:
+    """Two-level broadcast data plane: flat [m] payload at the flat
+    node-major ``root`` -> final [nodes, cores, m] state of every rank."""
+    from .hier import hier_host_plan
+
+    return hier_host_plan("broadcast", nodes, cores, n_inter, n_intra,
+                          root=root, backend=backend,
+                          interpret=interpret).run(values)
+
+
+def dataplane_hier_reduce(nodes: int, cores: int, n_inter: int, n_intra: int,
+                          root: int, values: np.ndarray, op: str,
+                          backend: str,
+                          interpret: Optional[bool] = None) -> np.ndarray:
+    """Two-level reduction data plane: [nodes, cores, m] contributions
+    -> the flat [m] op-reduction held by the root."""
+    from .hier import hier_host_plan
+
+    return hier_host_plan("reduce", nodes, cores, n_inter, n_intra,
+                          root=root, op=op, backend=backend,
+                          interpret=interpret).run(values)
+
+
+def dataplane_hier_allreduce(nodes: int, cores: int, n_inter: int,
+                             n_intra: int, root: int, values: np.ndarray,
+                             op: str, backend: str,
+                             interpret: Optional[bool] = None) -> np.ndarray:
+    """Two-level all-reduction data plane: [nodes, cores, m] in ->
+    [nodes, cores, m] out, every rank holding the composed reduction."""
+    from .hier import hier_host_plan
+
+    return hier_host_plan("allreduce", nodes, cores, n_inter, n_intra,
+                          root=root, op=op, backend=backend,
+                          interpret=interpret).run(values)
+
+
+def dataplane_hier_allgather(nodes: int, cores: int, n_inter: int,
+                             n_intra: int, values: np.ndarray, backend: str,
+                             interpret: Optional[bool] = None) -> np.ndarray:
+    """Two-level allgather data plane: [nodes, cores, e] contributions
+    -> the replicated [nodes*cores, e] rank-major gathered result."""
+    from .hier import hier_host_plan
+
+    return hier_host_plan("allgather", nodes, cores, n_inter, n_intra,
+                          backend=backend, interpret=interpret).run(values)

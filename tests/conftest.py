@@ -2,10 +2,20 @@
 
 ``run_worker`` launches tests/mp_worker.py in a subprocess with a
 forced p-device host platform, so the main pytest process keeps its
-single-device view (required for the smoke tests).  Both the collective
-suite (test_collectives.py) and the communicator suite (test_comm.py)
-use it; keeping it here means the invocation protocol (env flags,
-SKIP handling, timeout) cannot diverge between them.
+single-device view (required for the smoke tests).  The collective
+suite (test_collectives.py), the communicator suite (test_comm.py) and
+the hierarchical suite (test_hier.py) use it; keeping it here means the
+invocation protocol (env flags, SKIP handling, timeout) cannot diverge
+between them.
+
+``_plan_cache_isolation_audit`` is the autouse audit of the engine's
+process-wide, eviction-free plan cache: the cache's documented contract
+is that entries are immutable and identity-stable for the life of the
+process, so a test that *clears* it invalidates every plan identity
+other tests may hold.  The fixture fails any test that shrinks the
+cache without declaring the ``plan_cache_mutating`` marker -- making
+cache-clearing opt-in and visible instead of silent cross-test
+pollution.
 """
 
 import os
@@ -15,17 +25,20 @@ import sys
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
 WORKER = os.path.join(ROOT, "tests", "mp_worker.py")
 
 
-def run_worker(what: str, p: int, backend: str = "jnp"):
+def run_worker(what: str, p: int, backend: str = "jnp", *extra: str):
+    """Run ``tests/mp_worker.py what p backend *extra`` on a forced
+    p-device host platform; map a SKIP line to pytest.skip."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
-    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + env.get(
-        "PYTHONPATH", "")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     env["JAX_PLATFORMS"] = "cpu"
     res = subprocess.run(
-        [sys.executable, WORKER, what, str(p), backend],
+        [sys.executable, WORKER, what, str(p), backend,
+         *[str(a) for a in extra]],
         capture_output=True,
         text=True,
         env=env,
@@ -35,3 +48,29 @@ def run_worker(what: str, p: int, backend: str = "jnp"):
     if "SKIP" in res.stdout:
         pytest.skip(res.stdout.strip().splitlines()[-1])
     assert "ALL OK" in res.stdout
+
+
+@pytest.fixture(autouse=True)
+def _plan_cache_isolation_audit(request):
+    """Audit the process-wide plan cache around every test.
+
+    The cache is eviction-free by design; shrinking it mid-suite breaks
+    the ``cached_plan`` identity contract for every other test.  Tests
+    that legitimately clear it (the cache-management tests themselves)
+    declare ``@pytest.mark.plan_cache_mutating`` and must leave the
+    stats in a consistent reset state.
+    """
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.core.engine import plan_cache_info
+
+    before = plan_cache_info()
+    yield
+    after = plan_cache_info()
+    if request.node.get_closest_marker("plan_cache_mutating") is None:
+        assert after["size"] >= before["size"], (
+            f"{request.node.nodeid} shrank the process-wide plan cache "
+            f"({before['size']} -> {after['size']}) without the "
+            f"plan_cache_mutating marker; clearing it breaks the "
+            f"cached-plan identity contract for the rest of the suite"
+        )

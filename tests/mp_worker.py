@@ -14,6 +14,9 @@ if __name__ == "__main__":
     what = sys.argv[1] if len(sys.argv) > 1 else "all"
     p = int(sys.argv[2]) if len(sys.argv) > 2 else 8
     backend = sys.argv[3] if len(sys.argv) > 3 else "jnp"
+    # "hier" mode: argv[4] is the node count of the nodes x cores mesh
+    # (cores = p // nodes).
+    nodes = int(sys.argv[4]) if len(sys.argv) > 4 else 2
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={p}"
     )
@@ -343,6 +346,99 @@ def check_comm(p, backend="jnp"):
     print(f"comm shim equivalence p={p} backend={backend} ok")
 
 
+def check_hier(nodes, cores, backend="jnp"):
+    """Two-level hierarchical collectives on a (nodes x cores) mesh:
+    dict/mixed-dtype pytree payloads for broadcast / reduce / allreduce
+    / allgather, certified against per-leaf NumPy references, with
+    plan-cache identity and the composed round counts asserted."""
+    from jax.sharding import NamedSharding
+    from repro.core.hier import get_hier_comm, hier_rounds
+
+    p = nodes * cores
+    mesh = Mesh(np.array(jax.devices()[:p]).reshape(nodes, cores),
+                ("node", "core"))
+    spec2d = NamedSharding(mesh, P(("node", "core")))
+    hc = get_hier_comm(mesh, "node", "core", backend=backend)
+    rng = np.random.default_rng(31)
+
+    # ---- broadcast: dict pytree, mixed dtypes, ragged leaves, flat
+    # root in the last node's last core.
+    root = p - 1
+    state = {
+        "w": rng.normal(size=(p, 17, 3)).astype(np.float32),
+        "b": rng.integers(0, 100, size=(p, 11)).astype(np.int32),
+        "t": (rng.normal(size=(p, 5)).astype(jnp.bfloat16),),
+    }
+    xs = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), spec2d), state)
+    plan = hc.plan("broadcast", xs, n_inter=2, n_intra=3, root=root)
+    assert plan is hc.plan("broadcast", xs, n_inter=2, n_intra=3, root=root), \
+        "hier plan cache lost identity"
+    assert plan.rounds == hier_rounds("broadcast", nodes, cores, 2, 3)
+    out = plan(xs)
+    for k in ("w", "b"):
+        np.testing.assert_array_equal(
+            np.asarray(out[k]), np.broadcast_to(state[k][root],
+                                                state[k].shape))
+    np.testing.assert_array_equal(
+        np.asarray(out["t"][0], np.float32),
+        np.broadcast_to(np.asarray(state["t"][0], np.float32)[root],
+                        state["t"][0].shape))
+    print(f"hier broadcast {nodes}x{cores} root={root} backend={backend} ok")
+
+    # ---- reduce: bit-exact int sum at the root, zeros elsewhere; float
+    # max bit-exact too.
+    data = {"a": rng.integers(-50, 50, size=(p, 13)).astype(np.int32),
+            "b": rng.integers(-50, 50, size=(p, 7, 2)).astype(np.int32)}
+    ds = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), spec2d), data)
+    rroot = p // 2
+    red = hc.reduce(ds, n_inter=1, n_intra=2, root=rroot)
+    np.testing.assert_array_equal(np.asarray(red["a"])[rroot],
+                                  data["a"].sum(0))
+    np.testing.assert_array_equal(np.asarray(red["b"])[rroot],
+                                  data["b"].sum(0))
+    for r in range(p):
+        if r != rroot:
+            assert not np.asarray(red["a"])[r].any(), f"rank {r} not zeroed"
+    fdata = {"a": rng.normal(size=(p, 13)).astype(np.float32)}
+    fs = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), spec2d), fdata)
+    fred = hc.reduce(fs, n_inter=2, n_intra=2, root=0, op="max")
+    np.testing.assert_array_equal(np.asarray(fred["a"])[0],
+                                  fdata["a"].max(0))
+    print(f"hier reduce {nodes}x{cores} backend={backend} ok")
+
+    # ---- allreduce: every rank ends with the per-leaf reduction.
+    ar = hc.allreduce(ds, n_inter=2, n_intra=1)
+    for r in range(p):
+        np.testing.assert_array_equal(np.asarray(ar["a"])[r],
+                                      data["a"].sum(0))
+        np.testing.assert_array_equal(np.asarray(ar["b"])[r],
+                                      data["b"].sum(0))
+    arp = hc.plan("allreduce", ds, n_inter=2, n_intra=1)
+    assert arp.rounds == hier_rounds("allreduce", nodes, cores, 2, 1)
+    print(f"hier allreduce {nodes}x{cores} backend={backend} ok")
+
+    # ---- allgather: replicated rank-major result, mixed dtypes.
+    g = {"x": rng.normal(size=(p * 6,)).astype(np.float32),
+         "y": rng.integers(0, 9, size=(p, 4)).astype(np.int32)}
+    gs = jax.tree.map(lambda a: jax.device_put(jnp.asarray(a), spec2d), g)
+    got = hc.allgather(gs, n_inter=2, n_intra=2)
+    np.testing.assert_array_equal(np.asarray(got["x"]), g["x"])
+    np.testing.assert_array_equal(np.asarray(got["y"]), g["y"])
+    print(f"hier allgather {nodes}x{cores} backend={backend} ok")
+
+    # ---- degenerate embeddings: a 1 x p hier broadcast equals the flat
+    # circulant broadcast over the same devices.
+    mesh1 = Mesh(np.array(jax.devices()[:p]).reshape(1, p), ("node", "core"))
+    spec1 = NamedSharding(mesh1, P(("node", "core")))
+    h1 = get_hier_comm(mesh1, "node", "core", backend=backend)
+    arr = jax.device_put(jnp.asarray(state["w"]), spec1)
+    a = np.asarray(h1.broadcast(arr, n_intra=3, root=1))
+    b = np.asarray(circulant_broadcast(mesh1, "core", arr, n_blocks=3,
+                                       root=1, backend=backend))
+    np.testing.assert_array_equal(a, b)
+    print(f"hier degenerate 1x{p} == flat backend={backend} ok")
+
+
 def check_ring(p, elems=16):
     mesh = make_mesh(p)
     data = np.arange(p * elems, dtype=np.float32)
@@ -352,11 +448,16 @@ def check_ring(p, elems=16):
     print(f"ring p={p} ok")
 
 
-def main(what, p, backend="jnp"):
+def main(what, p, backend="jnp", nodes=2):
     if len(jax.devices()) < p:
         # Graceful skip (e.g. a backend that ignores the host-device
         # forcing flag): the caller maps this to pytest.skip.
         print(f"SKIP only {len(jax.devices())} device(s) available, need {p}")
+        return
+    if what == "hier":
+        assert p % nodes == 0, f"nodes={nodes} must divide p={p}"
+        check_hier(nodes, p // nodes, backend=backend)
+        print("ALL OK")
         return
     if what in ("broadcast", "all"):
         for n in (1, 2, 3, 5, 8):
@@ -397,4 +498,4 @@ def main(what, p, backend="jnp"):
 
 
 if __name__ == "__main__":
-    main(what, p, backend)
+    main(what, p, backend, nodes)

@@ -266,6 +266,7 @@ def test_host_plan_slot_tables_are_shared_and_immutable():
         fwd[0, 0] = 0
 
 
+@pytest.mark.plan_cache_mutating
 def test_plan_cache_clear_and_info():
     from repro.core.comm import host_plan
     from repro.core.engine import plan_cache_clear, plan_cache_info

@@ -125,6 +125,110 @@ def test_family_conformance_sampled_p(p):
     assert_family_conformance(p)
 
 
+# --------------------------------------------- hierarchical conformance
+#
+# Two-level (nodes x cores) composition over the same cached engine:
+# the composed round count must equal the closed form
+# hier_rounds(kind, N, C, n_N, n_C) = sum of per-level flat optima
+# (doubled for allreduce), and the composed host data plane must be
+# payload-bit-exact against a NumPy reference.  Grid includes the
+# paper's 36x32 evaluation topology, non-powers-of-two, and the
+# degenerate 1 x p / p x 1 meshes (where hier == the flat collective).
+
+# Deterministic mesh shapes: paper topology, non-powers-of-two both
+# levels, degenerate rows/columns, tiny edge meshes.
+EDGE_MESHES = [(1, 1), (1, 2), (2, 1), (1, 8), (8, 1), (2, 2), (3, 4),
+               (5, 3), (7, 2), (4, 8), (36, 32), (1, 36), (36, 1)]
+
+
+def assert_hier_conformance(nodes, cores, n_inter, n_intra):
+    from repro.core.hier import hier_host_plan, hier_rounds
+    from repro.core.schedule import num_rounds
+
+    # --- composed closed form: per-level flat optima, allreduce doubled.
+    per_level = num_rounds(nodes, n_inter) + num_rounds(cores, n_intra)
+    for kind in ("broadcast", "reduce", "allgather"):
+        assert hier_rounds(kind, nodes, cores, n_inter, n_intra) == per_level
+    assert hier_rounds("allreduce", nodes, cores, n_inter,
+                       n_intra) == 2 * per_level
+    # degenerate meshes collapse onto the flat single-level count
+    if nodes == 1:
+        assert per_level == num_rounds(cores, n_intra)
+    if cores == 1:
+        assert per_level == num_rounds(nodes, n_inter)
+
+    # --- payload bit-exactness of the composed data plane vs NumPy.
+    m = n_inter * n_intra
+    rng = np.random.default_rng(nodes * 1000 + cores)
+    root = int(rng.integers(0, nodes * cores))
+    vals = rng.integers(-10**6, 10**6, size=m).astype(np.int64)
+    got = hier_host_plan("broadcast", nodes, cores, n_inter, n_intra,
+                         root=root).run(vals)
+    assert got.shape == (nodes, cores, m)
+    assert (got == vals[None, None]).all(), (nodes, cores, root)
+
+    contrib = rng.integers(-10**6, 10**6,
+                           size=(nodes, cores, m)).astype(np.int64)
+    red = hier_host_plan("reduce", nodes, cores, n_inter, n_intra,
+                         root=root, op="sum").run(contrib)
+    np.testing.assert_array_equal(
+        red, contrib.reshape(nodes * cores, m).sum(axis=0))
+
+    ar = hier_host_plan("allreduce", nodes, cores, n_inter, n_intra,
+                        root=root, op="max").run(contrib)
+    expect = contrib.reshape(nodes * cores, m).max(axis=0)
+    assert (ar == expect[None, None]).all(), (nodes, cores, root)
+
+    e = 3
+    shards = rng.integers(-10**6, 10**6,
+                          size=(nodes, cores, e)).astype(np.int64)
+    ag = hier_host_plan("allgather", nodes, cores, n_inter,
+                        n_intra).run(shards)
+    np.testing.assert_array_equal(ag, shards.reshape(nodes * cores, e))
+
+
+@pytest.mark.parametrize("mesh", EDGE_MESHES,
+                         ids=lambda m: f"{m[0]}x{m[1]}")
+def test_hier_conformance_edge_meshes(mesh):
+    nodes, cores = mesh
+    assert_hier_conformance(nodes, cores, n_inter=2, n_intra=3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=1, max_value=36),
+       st.integers(min_value=1, max_value=32),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=1, max_value=4))
+def test_hier_conformance_sampled_meshes(nodes, cores, n_inter, n_intra):
+    assert_hier_conformance(nodes, cores, n_inter, n_intra)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=1, max_value=20),
+       st.integers(min_value=1, max_value=20))
+def test_hier_simulator_round_counts_match_closed_form(nodes, cores):
+    """The message-passing hier simulations complete in exactly the
+    composed optimum, with the per-level split equal to the flat
+    per-level optima."""
+    from repro.core import (
+        simulate_hier_allreduce,
+        simulate_hier_broadcast,
+        simulate_hier_reduce,
+    )
+    from repro.core.schedule import num_rounds
+
+    n_inter, n_intra = 2, 2
+    root = (nodes * cores) // 2
+    b = simulate_hier_broadcast(nodes, cores, n_inter, n_intra, root=root)
+    assert b.rounds == b.optimal_rounds
+    assert b.rounds_inter == num_rounds(nodes, n_inter)
+    assert b.rounds_intra == num_rounds(cores, n_intra)
+    r = simulate_hier_reduce(nodes, cores, n_inter, n_intra, root=root)
+    assert r.rounds == r.optimal_rounds == b.rounds
+    a = simulate_hier_allreduce(nodes, cores, n_inter, n_intra)
+    assert a.rounds == a.optimal_rounds == 2 * b.rounds
+
+
 @settings(max_examples=10, deadline=None)
 @given(st.integers(min_value=1, max_value=512), st.integers(min_value=1, max_value=9))
 def test_reversed_per_round_tables_match_plan(p, n):

@@ -1,0 +1,255 @@
+"""Adversarial schedule-conformance tests: the verifier must REJECT.
+
+The 1200+-test suite exercises `verify_bundle` / the Condition 3/4
+checkers on *valid* schedules only, which would also pass if the
+checkers were vacuous (always-True).  This file certifies the negative
+direction: targeted mutations of cached recv/send schedules -- swapping
+a round, duplicating a block, breaking the Proposition 4 gather
+identity, corrupting a reversed table -- and asserts every single one
+is rejected with an AssertionError (or a False from the per-processor
+predicate).  Each parametrized case first re-verifies the unmutated
+schedule, so a rejection can only come from the mutation itself.
+
+Mutations are applied to *copies* of the engine's cached tables (the
+originals are immutable, shared process-wide), both through the
+low-level ``verify_schedules`` / ``verify_reversed_schedules`` entry
+points and end-to-end through ``verify_bundle`` on a doctored
+ScheduleBundle.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.engine import ScheduleBundle, get_bundle
+from repro.core.schedule import baseblock
+from repro.core.verify import (
+    check_condition_3,
+    check_condition_4,
+    check_reversed_condition_3,
+    check_reversed_condition_4,
+    verify_bundle,
+    verify_reversed_schedules,
+    verify_schedules,
+)
+
+# Axis sizes with q >= 2 (mutations below need at least two rounds) and
+# boundary coverage: powers of two, +-1 neighbours, the paper's p=11/36.
+PS = [4, 5, 7, 8, 11, 16, 17, 31, 32, 36, 63, 64]
+
+
+def _rows(bundle):
+    """Writable (recv, send) row lists in virtual numbering (root 0)."""
+    return ([bundle.recv_row(r) for r in range(bundle.p)],
+            [bundle.send_row(r) for r in range(bundle.p)])
+
+
+def _nonroot_rank_with_distinct_cols(rows, q):
+    """(r, k, k') with r != 0 and rows[r][k] != rows[r][k']."""
+    for r in range(1, len(rows)):
+        for k in range(q):
+            for kk in range(k + 1, q):
+                if rows[r][k] != rows[r][kk]:
+                    return r, k, kk
+    raise AssertionError("no distinct pair found (q too small?)")
+
+
+# ------------------------------------------------ forward-table mutations
+
+
+@pytest.mark.parametrize("p", PS)
+def test_swap_a_round_is_rejected(p):
+    """Swapping two rounds of one rank's recv schedule keeps the block
+    *set* (Condition 3 still holds) but desynchronizes the rank from
+    its neighbours -- Conditions 1/2/4 must catch it."""
+    bundle = get_bundle(p)
+    recv, send = _rows(bundle)
+    verify_schedules(p, recv, send)  # positive control
+    r, k, kk = _nonroot_rank_with_distinct_cols(recv, bundle.q)
+    recv[r][k], recv[r][kk] = recv[r][kk], recv[r][k]
+    with pytest.raises(AssertionError):
+        verify_schedules(p, recv, send)
+
+
+@pytest.mark.parametrize("p", PS)
+def test_duplicate_a_block_is_rejected(p):
+    """Overwriting one recv entry with another duplicates a block, so
+    the rank never receives the overwritten one -- Condition 3's
+    distinctness must catch it."""
+    bundle = get_bundle(p)
+    recv, send = _rows(bundle)
+    verify_schedules(p, recv, send)
+    r, k, kk = _nonroot_rank_with_distinct_cols(recv, bundle.q)
+    recv[r][k] = recv[r][kk]
+    b = baseblock(r, bundle.skips, bundle.q)
+    assert not check_condition_3(recv[r], b, bundle.q)
+    with pytest.raises(AssertionError):
+        verify_schedules(p, recv, send)
+
+
+@pytest.mark.parametrize("p", PS)
+def test_broken_gather_identity_is_rejected(p):
+    """send[r][k] must equal recv[(r + skip[k]) % p][k] (Prop. 4 /
+    Condition 2); nudging one send entry off that value must fail."""
+    bundle = get_bundle(p)
+    recv, send = _rows(bundle)
+    verify_schedules(p, recv, send)
+    q, skip = bundle.q, bundle.skips
+    r, k = 1, 0
+    t = (r + skip[k]) % p
+    assert send[r][k] == recv[t][k]  # the identity we are about to break
+    send[r][k] = recv[t][k] + 1
+    with pytest.raises(AssertionError):
+        verify_schedules(p, recv, send)
+
+
+@pytest.mark.parametrize("p", PS)
+def test_corrupted_root_send_row_is_rejected(p):
+    """The root must send blocks 0..q-1 in order; any permutation of
+    that row is rejected."""
+    bundle = get_bundle(p)
+    recv, send = _rows(bundle)
+    send[0][0], send[0][-1] = send[0][-1], send[0][0]
+    with pytest.raises(AssertionError):
+        verify_schedules(p, recv, send)
+
+
+@pytest.mark.parametrize("p", PS)
+def test_condition4_rejects_unreceived_send(p):
+    """A rank sending a block before receiving it (and that is not its
+    phase-carried baseblock) violates Condition 4."""
+    bundle = get_bundle(p)
+    q, skip = bundle.q, bundle.skips
+    recv, send = _rows(bundle)
+    r, k, kk = _nonroot_rank_with_distinct_cols(recv, q)
+    b = baseblock(r, skip, q)
+    # Make round 1 send a block that is neither b-q (the phase-carried
+    # baseblock) nor anything received in round 0.
+    poison = max(max(recv[r]), max(send[r]), b) + 1
+    sent = list(send[r])
+    sent[min(1, q - 1)] = poison
+    assert not check_condition_4(recv[r], sent, b, q)
+    # And the full verifier rejects the poisoned table end-to-end.
+    send[r] = sent
+    with pytest.raises(AssertionError):
+        verify_schedules(p, recv, send)
+
+
+# ----------------------------------------------- reversed-table mutations
+
+
+@pytest.mark.parametrize("p", PS)
+def test_reversed_duplicate_forward_is_rejected(p):
+    """Duplicating a partial in a reversed send row means some block is
+    never forwarded -- a non-root would keep a contribution forever.
+    Reversed Condition 3 must catch it."""
+    bundle = get_bundle(p)
+    recv, send = _rows(bundle)
+    # Reversed roles: recv_rev == forward send, send_rev == forward recv.
+    verify_reversed_schedules(p, recv_rev=send, send_rev=recv)
+    r, k, kk = _nonroot_rank_with_distinct_cols(recv, bundle.q)
+    b = baseblock(r, bundle.skips, bundle.q)
+    recv[r][k] = recv[r][kk]
+    assert not check_reversed_condition_3(recv[r], b, bundle.q)
+    with pytest.raises(AssertionError):
+        verify_reversed_schedules(p, recv_rev=send, send_rev=recv)
+
+
+@pytest.mark.parametrize("p", PS)
+def test_reversed_root_accumulation_row_is_rejected(p):
+    """The root's reversed accumulation row is the forward root send row
+    0..q-1; corrupting it must be rejected."""
+    bundle = get_bundle(p)
+    recv, send = _rows(bundle)
+    send[0][0] = send[0][0] + 1
+    with pytest.raises(AssertionError):
+        verify_reversed_schedules(p, recv_rev=send, send_rev=recv)
+
+
+@pytest.mark.parametrize("p", PS)
+def test_reversed_condition4_rejects_stalled_partial(p):
+    """A partial accumulated in reversed round k must be forwarded in a
+    reversed-later round (column j < k) or be the phase-carried
+    baseblock; an accumulation with neither stalls on the rank."""
+    bundle = get_bundle(p)
+    q = bundle.q
+    recv, send = _rows(bundle)
+    r, _, _ = _nonroot_rank_with_distinct_cols(recv, q)
+    b = baseblock(r, bundle.skips, q)
+    rev_recv = list(send[r])   # the rank's reversed accumulation row
+    rev_send = list(recv[r])   # the rank's reversed forward row
+    assert check_reversed_condition_4(rev_recv, rev_send, b, q)
+    poison = max(max(rev_recv), max(rev_send), b) + 1
+    stalled = list(rev_recv)
+    stalled[q - 1] = poison    # accumulated last, never forwarded
+    assert not check_reversed_condition_4(stalled, rev_send, b, q)
+
+
+# ------------------------------------------------- end-to-end via bundles
+
+
+def _doctored_bundle(bundle, recv=None, send=None) -> ScheduleBundle:
+    """A ScheduleBundle with corrupted table copies (the cached arrays
+    are immutable and shared -- never mutate them in place)."""
+    return ScheduleBundle(
+        p=bundle.p, root=bundle.root, q=bundle.q, skips=bundle.skips,
+        recv=np.array(recv if recv is not None else bundle.recv),
+        send=np.array(send if send is not None else bundle.send),
+    )
+
+
+@pytest.mark.parametrize("p", PS)
+@pytest.mark.parametrize("root", [0, 1])
+def test_verify_bundle_rejects_corrupt_recv(p, root):
+    bundle = get_bundle(p, root)
+    verify_bundle(bundle)  # positive control
+    recv = np.array(bundle.recv)
+    r = (1 + root) % p
+    k, kk = 0, bundle.q - 1
+    if recv[r][k] == recv[r][kk]:  # ensure a real change
+        recv[r][k] = recv[r][kk] + 1
+    else:
+        recv[r][k], recv[r][kk] = recv[r][kk], recv[r][k]
+    with pytest.raises(AssertionError):
+        verify_bundle(_doctored_bundle(bundle, recv=recv))
+
+
+@pytest.mark.parametrize("p", PS)
+def test_verify_bundle_rejects_corrupt_send(p):
+    bundle = get_bundle(p)
+    send = np.array(bundle.send)
+    send[2 % p][0] += 1
+    with pytest.raises(AssertionError):
+        verify_bundle(_doctored_bundle(bundle, send=send))
+
+
+@pytest.mark.parametrize("p", PS)
+def test_verify_bundle_rejects_swapped_tables(p):
+    """Swapping the recv and send tables wholesale (a plausible wiring
+    bug: the reversed aliases point the wrong way) must be rejected."""
+    bundle = get_bundle(p)
+    with pytest.raises(AssertionError):
+        verify_bundle(_doctored_bundle(bundle, recv=bundle.send,
+                                       send=bundle.recv))
+
+
+def test_every_entry_mutation_rejected_exhaustively():
+    """For a small p, EVERY single-entry +1 nudge of either table is
+    rejected -- there is no entry the verifier does not constrain."""
+    p = 11
+    bundle = get_bundle(p)
+    for table in ("recv", "send"):
+        for r in range(p):
+            for k in range(bundle.q):
+                recv = np.array(bundle.recv)
+                send = np.array(bundle.send)
+                (recv if table == "recv" else send)[r][k] += 1
+                with pytest.raises(AssertionError):
+                    verify_bundle(_doctored_bundle(bundle, recv=recv,
+                                                   send=send))
+
+
+def test_positive_control_family():
+    """The unmutated engine tables pass both directions for every p used
+    above (so the rejections cannot come from a broken fixture)."""
+    for p in PS:
+        verify_bundle(get_bundle(p))
