@@ -58,6 +58,12 @@ def main() -> None:
 
         hier_bench.main()
 
+    if which in ("gradsync", "all"):
+        print("# === Gradient sync: quantized circulant vs ring vs GSPMD ===")
+        from benchmarks import gradsync_bench
+
+        gradsync_bench.main()
+
     if which in ("roundstep", "all"):
         print("# === Round-step data plane: jnp vs pallas backends ===")
         from benchmarks import allreduce_bench, bcast_bench

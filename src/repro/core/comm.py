@@ -96,6 +96,7 @@ KINDS = (
     "reduce",
     "allreduce",
     "allbroadcast",
+    "quantized_allreduce",
 )
 
 _CANONICAL_KIND = {"allbroadcast": "allgather"}
@@ -179,6 +180,19 @@ def _split_blocks(flat: jnp.ndarray, n: int):
     """Split a flat vector into n padded blocks + 1 garbage slot: [n+1, B]."""
     size = flat.shape[0]
     bs = -(-size // n)  # ceil
+    pad = n * bs - size
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(n, bs)
+    garbage = jnp.zeros((1, bs), flat.dtype)
+    return jnp.concatenate([blocks, garbage], axis=0), bs, pad
+
+
+def _split_blocks_q(flat: jnp.ndarray, n: int, qblock: int):
+    """:func:`_split_blocks` with the block size rounded up to a multiple
+    of the quantization block, so schedule blocks and quantization blocks
+    never straddle each other (one scale vector per schedule block)."""
+    size = flat.shape[0]
+    bs = -(-(-(-size // n)) // qblock) * qblock
     pad = n * bs - size
     flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(n, bs)
@@ -325,6 +339,164 @@ def _allgather_phase(flats, n, recv_slots, skips, perms, axis_name, r,
                 bufs[i] = step.unpack(bufs[i], got[i], S[t][base])
     return [buf[:, :n, :].reshape(p, -1)[:, :size].reshape(-1)
             for buf, size in zip(bufs, sizes)]
+
+
+def _qreduce_phase(flats, n, fwd_slots, acc_slots, perms, axis_name, r, step,
+                   qblock):
+    """Quantized-wire reversed (sum) rounds along ``axis_name``: the wire
+    carries int8 blocks + per-qblock f32 scales; every requantization's
+    error is accumulated into a per-slot error buffer on the rank that
+    generated it.  Returns per-leaf ``(buf, err, bs, size)`` with buf/err
+    the [1, n+2, bs] f32 buffers (root row of buf holds the lossy sum;
+    err holds each rank's locally generated error in SUM units)."""
+    F = jnp.asarray(fwd_slots)  # [R, p] static slot tables (root row
+    A = jnp.asarray(acc_slots)  # pinned to the identity slot n+1)
+    R = F.shape[0]
+    garbage = jnp.full((1,), n, jnp.int32)
+    bufs, errs, qmsgs, smsgs, metas = [], [], [], [], []
+    for flat in flats:
+        buf, bs, _ = _split_blocks_q(flat, n, qblock)  # [n+1, bs]
+        nb = bs // qblock
+        # slot n+1 is the sum identity (zero), matching _reduce_phase.
+        buf = jnp.concatenate(
+            [buf, jnp.zeros((1, bs), buf.dtype)], axis=0
+        )[None]                                        # [1, n+2, bs]
+        err = jnp.zeros_like(buf)
+        # Initial capture+drain of round 0's forwarded partial (zero
+        # message: dequant(0, 0) == 0 folds into the garbage slot).
+        buf, err, qm, sm = step.qacc_shuffle(
+            buf, err, jnp.zeros((1, bs), jnp.int8),
+            jnp.zeros((1, nb), jnp.float32), garbage, F[0, r][None])
+        bufs.append(buf)
+        errs.append(err)
+        qmsgs.append(qm)
+        smsgs.append(sm)
+        metas.append((bs, flat.shape[0]))
+    for t in range(R):
+        got_q = [jax.lax.ppermute(m, axis_name, perms[t]) for m in qmsgs]
+        got_s = [jax.lax.ppermute(m, axis_name, perms[t]) for m in smsgs]
+        nxt = F[t + 1, r][None] if t + 1 < R else garbage
+        for i in range(len(bufs)):
+            bufs[i], errs[i], qmsgs[i], smsgs[i] = step.qacc_shuffle(
+                bufs[i], errs[i], got_q[i], got_s[i], A[t, r][None], nxt)
+    return [(buf, err) + meta for buf, err, meta in zip(bufs, errs, metas)]
+
+
+def _quantized_allreduce_core(flats, n, fwd_slots, acc_slots, recv_slots,
+                              send_slots, red_perms, bc_perms, axis_name, r,
+                              root, step, qblock):
+    """int8-on-the-wire allreduce body (sum): quantized reversed reduce
+    to ``root``, root-side final requantization, then the forward
+    broadcast of the int8 blocks + scales, dequantized on every rank.
+
+    Returns ``(sums, errs)``: per-leaf flat f32 lossy sums (identical on
+    every rank) and per-leaf flat f32 error vectors in SUM units -- each
+    rank holds only its locally generated quantization error, and
+
+        exact_sum == lossy_sum + psum(err)
+
+    holds bit-for-bit up to f32 accumulation order (the error-feedback
+    completeness invariant; see optim/compression.py).
+    """
+    from repro.kernels.quant_ops import (
+        dequant_blocks,
+        quant_blocks,
+        quant_error,
+    )
+
+    reduced = _qreduce_phase(flats, n, fwd_slots, acc_slots, red_perms,
+                             axis_name, r, step, qblock)
+    q_flats, s_flats, err_flats, sizes, bss = [], [], [], [], []
+    for buf, err, bs, size in reduced:
+        nb = bs // qblock
+        data = buf[0, :n]                              # [n, bs]
+        q, sc = quant_blocks(data.reshape(n * nb, qblock))
+        eps = quant_error(data.reshape(n * nb, qblock), q, sc).reshape(n, bs)
+        is_root = r == root
+        # Non-root rows were drained by the reduce, but capped re-sends
+        # can leave stale partials in slot n-1 -- zero them exactly as
+        # _lower_broadcast zeroes non-root payloads.
+        q_flats.append(jnp.where(is_root, q.reshape(-1),
+                                 jnp.zeros((n * bs,), jnp.int8)))
+        s_flats.append(jnp.where(is_root, sc.reshape(-1),
+                                 jnp.zeros((n * nb,), jnp.float32)))
+        # The final quantization error belongs to the root (the rank
+        # that generated it); everyone else contributes zero.
+        e = err[0, :n] + jnp.where(is_root, eps, jnp.zeros_like(eps))
+        err_flats.append(e.reshape(-1))
+        sizes.append(size)
+        bss.append(bs)
+    outs = _bcast_phase(q_flats + s_flats, n, recv_slots, send_slots,
+                        bc_perms, axis_name, r, step)
+    L = len(q_flats)
+    sums, errs = [], []
+    for i in range(L):
+        bs, size = bss[i], sizes[i]
+        nb = bs // qblock
+        red = dequant_blocks(
+            outs[i].reshape(n * nb, qblock),
+            outs[L + i].reshape(n * nb, 1),
+        ).reshape(-1)[:size]
+        # Pad-lane error is identically zero (all ranks pad with exact
+        # zeros), but fold the tail anyway so truncation provably never
+        # drops error mass.
+        e_full = err_flats[i]
+        e = e_full[:size].at[size - 1].add(jnp.sum(e_full[size:]))
+        sums.append(red)
+        errs.append(e)
+    return sums, errs
+
+
+def circulant_qallreduce_body(flats, axis_name: str, p: int, *,
+                              n_blocks: Optional[int] = None, root: int = 0,
+                              backend: str = "jnp",
+                              qblock: Optional[int] = None):
+    """Run the quantized circulant allreduce inside an existing shard_map.
+
+    ``flats``: list of flat f32 vectors (every rank passes the same
+    shapes).  Returns ``(sums, errs)`` as in
+    :func:`_quantized_allreduce_core`; the caller divides by ``p`` for a
+    mean.  Static planning (block count, slot tables, rotations, step
+    handle) is resolved once per (p, sizes, n, root, qblock, backend)
+    via the process-wide plan cache -- trainers reuse one frozen plan
+    per bucket spec across steps.  For a standalone collective use
+    ``CirculantComm.plan("quantized_allreduce", ...)`` instead.
+    """
+    from repro.kernels.quant_ops import QBLOCK
+
+    qblock = QBLOCK if qblock is None else int(qblock)
+    sizes = tuple(int(f.shape[0]) for f in flats)
+    if p == 1:
+        return list(flats), [jnp.zeros_like(f) for f in flats]
+    (n, fwd, acc, recv, send, red_perms, bc_perms) = _qsync_static(
+        p, sizes, n_blocks, int(root), qblock, backend)
+    step = get_round_step(backend)
+    r = jax.lax.axis_index(axis_name)
+    return _quantized_allreduce_core(
+        flats, n, fwd, acc, recv, send, red_perms, bc_perms, axis_name, r,
+        int(root), step, qblock)
+
+
+def _qsync_static(p: int, sizes: Tuple[int, ...], n_blocks: Optional[int],
+                  root: int, qblock: int, backend: str):
+    """Cached static tables for :func:`circulant_qallreduce_body`."""
+    key = ("qsync", p, sizes, n_blocks, root, qblock, backend)
+
+    def build():
+        # Wire bytes are ~1 per element (int8 + amortized scales).
+        total = max(1, sum(sizes))
+        n = n_blocks or max(
+            1, optimal_num_blocks_reduce(p, total, DEFAULT_MODEL))
+        n = min(n, max(1, -(-max(sizes) // qblock)))
+        bundle = get_bundle(p, root)
+        fwd, acc, ks_r = reduce_slot_plan(bundle, n)
+        recv, send, ks_b = broadcast_slot_plan(bundle, n)
+        red_perms = [_rot_perm(p, (p - bundle.skip[int(k)]) % p)
+                     for k in ks_r]
+        bc_perms = [_rot_perm(p, bundle.skip[int(k)]) for k in ks_b]
+        return (n, fwd, acc, recv, send, red_perms, bc_perms)
+
+    return cached_plan(key, build)
 
 
 # ------------------------------------------------------- device lowerings
@@ -557,6 +729,50 @@ def _lower_reduce_scatter(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
     return _tree_executor(shard_fn, spec.treedef)
 
 
+def _lower_quantized_allreduce(mesh: Mesh, axis_name: str,
+                               bundle: ScheduleBundle, n: int, root: int,
+                               backend: str, spec: PayloadSpec,
+                               qblock: int) -> Callable:
+    p = bundle.p
+    fwd_slots, acc_slots, _ = reduce_slot_plan(bundle, n)
+    recv_slots, send_slots, ks_b = broadcast_slot_plan(bundle, n)
+    _, _, ks_r = reduce_slot_plan(bundle, n)
+    step = get_round_step(backend)
+    red_perms = [_rot_perm(p, (p - bundle.skip[int(k)]) % p) for k in ks_r]
+    bc_perms = [_rot_perm(p, bundle.skip[int(k)]) for k in ks_b]
+    L = spec.num_leaves
+    treedef = spec.treedef
+
+    def body(*shards):
+        r = jax.lax.axis_index(axis_name)
+        flats = [xs.reshape(-1) for xs in shards]
+        shapes = [xs.shape for xs in shards]
+        sums, errs = _quantized_allreduce_core(
+            flats, n, fwd_slots, acc_slots, recv_slots, send_slots,
+            red_perms, bc_perms, axis_name, r, root, step, qblock)
+        return (tuple(f.reshape(s) for f, s in zip(sums, shapes))
+                + tuple(f.reshape(s) for f, s in zip(errs, shapes)))
+
+    shard_fn = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis_name),) * L,
+        out_specs=(P(axis_name),) * (2 * L),
+        # sums are replicated by construction, errs are genuinely
+        # per-rank; vma checking can't express the mix (and pallas has
+        # no replication rule anyway).
+        check_vma=False,
+    )
+
+    def execute(payload):
+        leaves = treedef.flatten_up_to(payload)
+        outs = list(shard_fn(*leaves))
+        return (jax.tree.unflatten(treedef, outs[:L]),
+                jax.tree.unflatten(treedef, outs[L:]))
+
+    return execute
+
+
 # ------------------------------------------------------------ plan objects
 
 
@@ -582,9 +798,13 @@ class CollectivePlan:
     rounds: int
     backend: str
     axis_name: str
+    qblock: Optional[int] = None
     _execute: Optional[Callable] = field(repr=False, default=None)
 
     def __call__(self, payload: Any) -> Any:
+        """Execute the collective.  ``quantized_allreduce`` plans return
+        a ``(sums, errors)`` pair of payload-shaped trees; every other
+        kind returns one payload-shaped tree."""
         validate_payload(self.spec, payload)
         if self._execute is None:  # p == 1 fast path: nothing moves
             return payload
@@ -593,6 +813,8 @@ class CollectivePlan:
     def describe(self) -> str:
         """One-line human summary of the plan."""
         extra = f" op={self.op}" if self.op else ""
+        if self.qblock is not None:
+            extra += f" qblock={self.qblock}"
         return (f"{self.kind} p={self.p} root={self.root} "
                 f"n={self.n_blocks} rounds={self.rounds} "
                 f"backend={self.backend}{extra} spec={self.spec.describe()}")
@@ -647,6 +869,27 @@ def _resolve_allgatherv(spec: PayloadSpec, p: int, n_blocks: Optional[int],
     n = n_blocks or max(
         1, optimal_num_blocks_allgather(p, max(total, 1), model))
     return min(n, max(1, min_pos if min_pos is not None else 1))
+
+
+def _resolve_quantized(spec: PayloadSpec, p: int, n_blocks: Optional[int],
+                       model: CommModel, qblock: int) -> int:
+    elems = []
+    total = 0
+    for shape, dtype in spec.leaves:
+        _require(len(shape) >= 1 and shape[0] == p,
+                 "payload leaves must have leading axis == axis size "
+                 f"(one slice/rank); got {shape} for p={p}")
+        _require(np.dtype(dtype) == np.float32,
+                 "quantized_allreduce requires float32 leaves (cast, or "
+                 "use optim.compression.compressed_allreduce_tree for "
+                 f"bf16/f16 gradients); got {np.dtype(dtype).name}")
+        e = _leaf_elems(shape[1:])
+        elems.append(e)
+        total += e  # ~1 wire byte per element (int8 + amortized scales)
+    n = n_blocks or max(
+        1, optimal_num_blocks_reduce(p, max(total, 1), model))
+    # More blocks than ceil(elems/qblock) would be pure padding.
+    return min(n, max(1, -(-max(elems) // qblock)))
 
 
 def _resolve_reduce_scatter(spec: PayloadSpec, p: int,
@@ -724,12 +967,17 @@ class CirculantComm:
     # ------------------------------------------------------------- planning
 
     def plan(self, kind: str, spec: Any, *, n_blocks: Optional[int] = None,
-             root: int = 0, op: str = "sum",
-             sizes: Any = None) -> CollectivePlan:
+             root: int = 0, op: str = "sum", sizes: Any = None,
+             qblock: Optional[int] = None) -> CollectivePlan:
         """Precompute a :class:`CollectivePlan` for ``kind`` and a payload
         spec (an example payload, a pytree of ``ShapeDtypeStruct``s, or a
         :class:`PayloadSpec`).  Cached process-wide: equal arguments
         return the identical plan object.
+
+        ``kind="quantized_allreduce"`` plans the int8-on-the-wire sum
+        allreduce (f32 leaves only; ``qblock`` sets the quantization
+        block, default :data:`repro.kernels.quant_ops.QBLOCK`); calling
+        it returns a ``(sums, errors)`` pair of payload-shaped trees.
         """
         if kind not in KINDS:
             raise ValueError(f"unknown collective kind {kind!r} "
@@ -740,31 +988,47 @@ class CirculantComm:
         # Arguments that don't apply to the kind are rejected (a silently
         # dropped op= or root= would return numerically wrong results
         # with no diagnostic), then normalized out of the cache key.
-        rooted = kind in ("broadcast", "reduce", "allreduce")
+        rooted = kind in ("broadcast", "reduce", "allreduce",
+                          "quantized_allreduce")
         reducing = kind in ("reduce", "allreduce")
         _require(rooted or int(root) == 0,
                  f"root= does not apply to kind {kind!r}")
         _require(reducing or op == "sum",
                  f"op= does not apply to kind {kind!r}"
                  + (" (reduce_scatter always sums)"
-                    if kind == "reduce_scatter" else ""))
+                    if kind == "reduce_scatter" else "")
+                 + (" (quantized_allreduce always sums)"
+                    if kind == "quantized_allreduce" else ""))
         _require(kind == "allgatherv" or sizes is None,
                  f"sizes= only applies to allgatherv, not {kind!r}")
+        _require(kind == "quantized_allreduce" or qblock is None,
+                 f"qblock= only applies to quantized_allreduce, "
+                 f"not {kind!r}")
         root_key = int(root) if rooted else 0
         op_key = op if reducing else None
         sizes_key = _canon_sizes(spec, sizes) if kind == "allgatherv" else None
+        if kind == "quantized_allreduce":
+            from repro.kernels.quant_ops import QBLOCK
+
+            qblock_key: Optional[int] = (QBLOCK if qblock is None
+                                         else int(qblock))
+            _require(qblock_key >= 1, f"qblock must be >= 1, got {qblock_key}")
+        else:
+            qblock_key = None
         # Resolve the block count up front (pure host work, also the
         # payload-shape validation) so n_blocks=None and an explicit
         # n_blocks equal to the cost-model optimum key the same entry --
         # one shard_map trace and one XLA executor, not two.
-        n = self._resolve_n(kind, spec, n_blocks, sizes_key)
+        n = self._resolve_n(kind, spec, n_blocks, sizes_key, qblock_key)
         key = ("commplan", self.mesh, self.axis_name, self.backend,
-               self.model, kind, spec, n, root_key, op_key, sizes_key)
+               self.model, kind, spec, n, root_key, op_key, sizes_key,
+               qblock_key)
         return cached_plan(key, lambda: self._build(
-            kind, spec, n, root_key, op_key, sizes_key))
+            kind, spec, n, root_key, op_key, sizes_key, qblock_key))
 
     def _resolve_n(self, kind: str, spec: PayloadSpec,
-                   n_blocks: Optional[int], sizes_canon) -> int:
+                   n_blocks: Optional[int], sizes_canon,
+                   qblock: Optional[int] = None) -> int:
         p = self.p
         if p == 1:
             # The fast path skips payload-shape validation (matching the
@@ -787,13 +1051,15 @@ class CirculantComm:
                                        sizes_canon)
         if kind == "reduce_scatter":
             return _resolve_reduce_scatter(spec, p, n_blocks, self.model)
+        if kind == "quantized_allreduce":
+            return _resolve_quantized(spec, p, n_blocks, self.model, qblock)
         # reduce / allreduce
         return _resolve_broadcast(spec, p, n_blocks, self.model,
                                   optimal_num_blocks_reduce)
 
     def _build(self, kind: str, spec: PayloadSpec, n: int,
-               root: int, op: Optional[str],
-               sizes_canon) -> CollectivePlan:
+               root: int, op: Optional[str], sizes_canon,
+               qblock: Optional[int] = None) -> CollectivePlan:
         p = self.p
         if op is not None:
             # Validate the op name host-side, before any tracing; the
@@ -803,11 +1069,16 @@ class CirculantComm:
             op_identity(op, np.float32)
         if p == 1:
             # Fast path: nothing moves on a one-rank axis; the plan is
-            # the identity.
+            # the identity.  quantized_allreduce still returns its
+            # (sums, errors) pair -- errors identically zero.
+            ex = None
+            if kind == "quantized_allreduce":
+                ex = lambda payload: (  # noqa: E731
+                    payload, jax.tree.map(jnp.zeros_like, payload))
             return CollectivePlan(
                 kind=kind, spec=spec, p=p, root=0, op=op,
                 n_blocks=n, rounds=0, backend=self.backend,
-                axis_name=self.axis_name, _execute=None)
+                axis_name=self.axis_name, qblock=qblock, _execute=ex)
 
         bundle = get_bundle(p, root)
         mesh, axis = self.mesh, self.axis_name
@@ -830,6 +1101,10 @@ class CirculantComm:
             ex = _lower_reduce(mesh, axis, bundle, n, root, op, self.backend,
                                spec)
             rounds = bundle.rounds(n)
+        elif kind == "quantized_allreduce":
+            ex = _lower_quantized_allreduce(mesh, axis, bundle, n, root,
+                                            self.backend, spec, qblock)
+            rounds = bundle.allreduce_rounds(n)
         else:  # allreduce: reversed reduce then forward broadcast, one n
             red = _lower_reduce(mesh, axis, bundle, n, root, op, self.backend,
                                 spec)
@@ -840,7 +1115,7 @@ class CirculantComm:
         return CollectivePlan(
             kind=kind, spec=spec, p=p, root=root, op=op, n_blocks=n,
             rounds=rounds, backend=self.backend, axis_name=self.axis_name,
-            _execute=jax.jit(ex))
+            qblock=qblock, _execute=jax.jit(ex))
 
     # ------------------------------------------------ collective shorthands
     #
@@ -886,6 +1161,15 @@ class CirculantComm:
         return self.plan("allbroadcast", payload_spec(x),
                          n_blocks=n_blocks)(x)
 
+    def quantized_allreduce(self, x: Any, *,
+                            n_blocks: Optional[int] = None, root: int = 0,
+                            qblock: Optional[int] = None) -> Any:
+        """int8-on-the-wire sum allreduce -> ``(sums, errors)`` trees
+        (f32 leaves; errors are each rank's local quantization error in
+        SUM units -- see docs/gradsync.md)."""
+        return self.plan("quantized_allreduce", payload_spec(x),
+                         n_blocks=n_blocks, root=root, qblock=qblock)(x)
+
 
 def get_comm(mesh: Mesh, axis_name: str, *, backend: str = "jnp",
              model: CommModel = DEFAULT_MODEL) -> CirculantComm:
@@ -930,6 +1214,16 @@ def _x64():
     return enable_x64()
 
 
+@jax.jit
+def _jit_requant(x2d):
+    """quantize + error capture under jit: one fused multiply-add per
+    lane for the error, matching the round-step kernels bit-for-bit."""
+    from repro.kernels.quant_ops import quant_blocks, quant_error
+
+    q, sc = quant_blocks(x2d)
+    return q, sc, quant_error(x2d, q, sc)
+
+
 @dataclass(frozen=True, eq=False)
 class HostDataPlan:
     """Precomputed host-side data-plane execution (the certification
@@ -946,12 +1240,15 @@ class HostDataPlan:
     ks: np.ndarray = field(repr=False)
     skips: Tuple[int, ...] = field(repr=False)
     step: Any = field(repr=False)
+    qblock: Optional[int] = None
 
     def run(self, values: np.ndarray) -> np.ndarray:
         if self.kind == "broadcast":
             return self._run_broadcast(values)
         if self.kind == "allgather":
             return self._run_allgather(values)
+        if self.kind == "quantized_allreduce":
+            return self._run_quantized(values)
         return self._run_reduce(values)
 
     def _run_broadcast(self, values: np.ndarray) -> np.ndarray:
@@ -1037,35 +1334,128 @@ class HostDataPlan:
                     buf, got, jnp.asarray(acc_slots[t]), nxt, op=self.op)
             return np.asarray(buf)[:, :n]
 
+    def _run_quantized(self, values: np.ndarray):
+        """``values``: [p, n(, bs)] per-rank f32 contributions (bs a
+        multiple of qblock) -> ``(out, err)``: the [p, n, bs] lossy sums
+        (every row identical) and each rank's locally generated
+        quantization error, with ``values.sum(0) == out[r] + err.sum(0)``
+        up to f32 accumulation order.  Runs in f32 (the wire format's
+        own precision), unlike the exact kinds' x64 certification."""
+        from repro.kernels.quant_ops import (
+            dequant_blocks,
+            quant_blocks,
+            quant_error,
+        )
+
+        p, n, qb = self.p, self.n, self.qblock
+        fwd_slots, acc_slots, recv_slots, send_slots = self.slots
+        red_skips, bc_skips = self.skips
+        vals = _as_blocks(np.asarray(values, np.float32), 1)  # [p, n, bs]
+        bs = vals.shape[-1]
+        if bs % qb:
+            raise ValueError(f"block size {bs} not a multiple of "
+                             f"qblock {qb}")
+        nb = bs // qb
+        npbuf = np.concatenate(
+            [vals, np.zeros((p, 2, bs), np.float32)], axis=1)  # n: garbage,
+        buf = jnp.asarray(npbuf)                               # n+1: identity
+        err = jnp.zeros_like(buf)
+        garbage = jnp.full((p,), n, jnp.int32)
+        buf, err, qm, sm = self.step.qacc_shuffle(
+            buf, err, jnp.zeros((p, bs), jnp.int8),
+            jnp.zeros((p, nb), jnp.float32), garbage,
+            jnp.asarray(fwd_slots[0]))
+        R = len(red_skips)
+        for t in range(R):
+            gq = jnp.roll(qm, -red_skips[t], axis=0)
+            gs = jnp.roll(sm, -red_skips[t], axis=0)
+            nxt = (jnp.asarray(fwd_slots[t + 1]) if t + 1 < R else garbage)
+            buf, err, qm, sm = self.step.qacc_shuffle(
+                buf, err, gq, gs, jnp.asarray(acc_slots[t]), nxt)
+        # Root-side final requantization: the wire format of the
+        # broadcast phase; its error belongs to the root rank.  Jitted
+        # so the error capture has the same fused multiply-add rounding
+        # as the in-round captures (eager jnp materializes the f32
+        # product and rounds twice).
+        droot = buf[self.root, :n]                             # [n, bs]
+        q, sc, eps = _jit_requant(droot.reshape(n * nb, qb))
+        eps = eps.reshape(n, bs)
+        err = err.at[self.root, :n].add(eps)
+        qbuf = jnp.zeros((p, n + 1, bs), jnp.int8)
+        qbuf = qbuf.at[self.root, :n].set(q.reshape(n, bs))
+        sbuf = jnp.zeros((p, n + 1, nb), jnp.float32)
+        sbuf = sbuf.at[self.root, :n].set(sc.reshape(n, nb))
+        Rb = len(bc_skips)
+        msgq = self.step.pack(qbuf, jnp.asarray(send_slots[0]))
+        msgs_ = self.step.pack(sbuf, jnp.asarray(send_slots[0]))
+        for t in range(Rb):
+            gq = jnp.roll(msgq, bc_skips[t], axis=0)
+            gs = jnp.roll(msgs_, bc_skips[t], axis=0)
+            if t + 1 < Rb:
+                qbuf, msgq = self.step.shuffle(
+                    qbuf, gq, jnp.asarray(recv_slots[t]),
+                    jnp.asarray(send_slots[t + 1]))
+                sbuf, msgs_ = self.step.shuffle(
+                    sbuf, gs, jnp.asarray(recv_slots[t]),
+                    jnp.asarray(send_slots[t + 1]))
+            else:
+                qbuf = self.step.unpack(qbuf, gq,
+                                        jnp.asarray(recv_slots[t]))
+                sbuf = self.step.unpack(sbuf, gs,
+                                        jnp.asarray(recv_slots[t]))
+        out = dequant_blocks(
+            qbuf[:, :n].reshape(p * n * nb, qb),
+            sbuf[:, :n].reshape(p * n * nb, 1),
+        ).reshape(p, n, bs)
+        return np.asarray(out), np.asarray(err)[:, :n]
+
 
 def host_plan(kind: str, p: int, n: int, *, root: int = 0, op: str = "sum",
-              backend: str = "jnp",
-              interpret: Optional[bool] = None) -> HostDataPlan:
+              backend: str = "jnp", interpret: Optional[bool] = None,
+              qblock: Optional[int] = None) -> HostDataPlan:
     """The cached :class:`HostDataPlan` for a certification execution.
 
-    ``kind``: ``"broadcast"``, ``"allgather"`` or ``"reduce"``.  Equal
-    arguments return the identical plan object; ``run(values)`` then
-    does no schedule or slot-table work.
+    ``kind``: ``"broadcast"``, ``"allgather"``, ``"reduce"`` or
+    ``"quantized_allreduce"`` (``qblock`` applies to the latter only).
+    Equal arguments return the identical plan object; ``run(values)``
+    then does no schedule or slot-table work.
     """
-    if kind not in ("broadcast", "allgather", "reduce"):
+    if kind not in ("broadcast", "allgather", "reduce",
+                    "quantized_allreduce"):
         raise ValueError(f"unknown host data-plane kind {kind!r}")
+    if qblock is not None and kind != "quantized_allreduce":
+        raise ValueError(f"qblock= does not apply to kind {kind!r}")
+    if kind == "quantized_allreduce":
+        from repro.kernels.quant_ops import QBLOCK
+
+        qblock = QBLOCK if qblock is None else int(qblock)
     root_key = int(root) if kind != "allgather" else 0
-    op_key = op if kind == "reduce" else None
+    op_key = op if kind in ("reduce", "quantized_allreduce") else None
+    if kind == "quantized_allreduce" and op != "sum":
+        raise ValueError("quantized_allreduce always sums")
     key = ("hostplan", kind, int(p), int(n), root_key, op_key, backend,
-           interpret)
+           interpret, qblock)
 
     def build():
         bundle = get_bundle(p, root_key)
         if kind == "reduce":
             fwd, acc, ks = reduce_slot_plan(bundle, n)
             slots = (fwd, acc)
+            skips = tuple(int(bundle.skip[int(k)]) for k in ks)
+        elif kind == "quantized_allreduce":
+            fwd, acc, ks = reduce_slot_plan(bundle, n)
+            recv, send, ks_b = broadcast_slot_plan(bundle, n)
+            slots = (fwd, acc, recv, send)
+            # one skip tuple per phase (reduce rounds, broadcast rounds)
+            skips = (tuple(int(bundle.skip[int(k)]) for k in ks),
+                     tuple(int(bundle.skip[int(k)]) for k in ks_b))
         else:
             recv, send, ks = broadcast_slot_plan(bundle, n)
             slots = (recv, send) if kind == "broadcast" else (recv,)
-        skips = tuple(int(bundle.skip[int(k)]) for k in ks)
+            skips = tuple(int(bundle.skip[int(k)]) for k in ks)
         return HostDataPlan(
             kind=kind, p=int(p), n=int(n), root=root_key, op=op_key,
             backend=backend, slots=slots, ks=ks, skips=skips,
-            step=get_round_step(backend, interpret))
+            step=get_round_step(backend, interpret), qblock=qblock)
 
     return cached_plan(key, build)

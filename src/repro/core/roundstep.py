@@ -171,6 +171,14 @@ class RoundStep:
         slots coincide), then buf[fwd] = identity(op, dtype)."""
         raise NotImplementedError
 
+    def qacc_shuffle(self, buf, err, qmsg, smsg, acc_idx, fwd_idx):
+        """Quantized-wire acc_shuffle (sum only) -> (new_buf, new_err,
+        out_q, out_s): dequantize (qmsg, smsg) and accumulate into
+        buf[acc], requantize the captured buf[fwd] for the wire,
+        accumulate its requantization error into err[fwd], drain
+        buf[fwd] to zero."""
+        raise NotImplementedError
+
 
 class JnpRoundStep(RoundStep):
     """Pure-jnp reference backend (gathers + ``.at[]`` scatters).
@@ -194,6 +202,10 @@ class JnpRoundStep(RoundStep):
     def acc_shuffle(self, buf, msg, acc_idx, fwd_idx, *, op: str = "sum"):
         return _jnp_call("block_acc_shuffle_ref", buf, msg, acc_idx, fwd_idx,
                          op=op)
+
+    def qacc_shuffle(self, buf, err, qmsg, smsg, acc_idx, fwd_idx):
+        return _jnp_call("block_qacc_shuffle_ref", buf, err, qmsg, smsg,
+                         acc_idx, fwd_idx)
 
 
 _jnp_jits = {}
@@ -249,6 +261,12 @@ class PallasRoundStep(RoundStep):
 
         return schedule_acc_shuffle(buf, msg, acc_idx, fwd_idx, op=op,
                                     interpret=self.interpret)
+
+    def qacc_shuffle(self, buf, err, qmsg, smsg, acc_idx, fwd_idx):
+        from repro.kernels.ops import schedule_qacc_shuffle
+
+        return schedule_qacc_shuffle(buf, err, qmsg, smsg, acc_idx, fwd_idx,
+                                     interpret=self.interpret)
 
 
 _step_handles = {}

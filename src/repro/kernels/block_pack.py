@@ -51,6 +51,7 @@ from jax.experimental.pallas import tpu as pltpu
 # Single source for combine/identity semantics across kernels, the jnp
 # oracles and the collectives (re-exported here for consumers that only
 # know the kernel module).
+from .quant_ops import dequant_blocks, quant_blocks, quant_error
 from .reduce_ops import op_combine, op_identity
 
 
@@ -266,3 +267,117 @@ def block_acc_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
         interpret=_resolve(interpret),
     )(acc_idx.astype(jnp.int32), fwd_idx.astype(jnp.int32),
       msg, buffers, buffers)
+
+
+# --------------------- fused dequantize+accumulate+requantize (reduce)
+
+
+def _qacc_shuffle_kernel(acc_ref, fwd_ref, qmsg_ref, smsg_ref, ro_ref,
+                         alias_ref, erro_ref, outbuf_ref, outerr_ref,
+                         outq_ref, outs_ref, q_scr, s_scr, e_scr, *, nb, qb):
+    r = pl.program_id(0)
+    s = pl.program_id(1)
+    # Same two-step grid as _acc_shuffle_kernel (s=0 accumulate, s=1
+    # drain), with the wire format quantized: the incoming message is
+    # int8 blocks + per-QBLOCK f32 scales, dequantized on the fly; the
+    # captured outgoing partial is requantized for the next hop and its
+    # requantization error accumulated into the matching err slot (the
+    # per-hop term the error-feedback sum needs -- dropping it is a
+    # first-order bias, see optim/compression.py).
+    deq = dequant_blocks(
+        qmsg_ref[...].reshape(nb, qb), smsg_ref[...].reshape(nb, 1)
+    )
+    combined = alias_ref[0, 0].reshape(nb, qb) + deq
+
+    @pl.when(s == 0)
+    def _():
+        same = acc_ref[r] == fwd_ref[r]
+        captured = jnp.where(same, combined, ro_ref[0, 0].reshape(nb, qb))
+        q, sc = quant_blocks(captured)
+        q_scr[...] = q.reshape(1, nb * qb)
+        s_scr[...] = sc.reshape(1, nb)
+        e_scr[...] = (
+            erro_ref[0, 0].reshape(nb, qb) + quant_error(captured, q, sc)
+        ).reshape(1, nb * qb)
+
+    outbuf_ref[...] = jnp.where(
+        s == 0, combined, jnp.zeros_like(combined)
+    ).reshape(1, 1, nb * qb)
+    outerr_ref[...] = e_scr[...][None]
+    outq_ref[...] = q_scr[...]
+    outs_ref[...] = s_scr[...]
+
+
+def block_qacc_shuffle(buffers: jnp.ndarray, err: jnp.ndarray,
+                       qmsg: jnp.ndarray, smsg: jnp.ndarray,
+                       acc_idx: jnp.ndarray, fwd_idx: jnp.ndarray,
+                       *, interpret=None):
+    """Fused dequantize+accumulate(t) + requantize/capture/drain(t+1).
+
+    The quantized-wire variant of :func:`block_acc_shuffle` (sum only).
+    buffers/err: [R, nslots, bs] f32 partial sums and their accumulated
+    requantization errors; qmsg: [R, bs] int8 incoming payload; smsg:
+    [R, nb] f32 per-QBLOCK scales (bs == nb * qb).  Per row r, in order:
+
+      1. ``buffers[r, acc_idx[r]] += dequant(qmsg[r], smsg[r])``
+      2. capture ``buffers[r, fwd_idx[r]]`` (sees step 1 when the slots
+         coincide), requantize it to ``(out_q[r], out_s[r])``
+      3. ``err[r, fwd_idx[r]] += captured - dequant(out_q[r], out_s[r])``
+      4. drain ``buffers[r, fwd_idx[r]]`` to zero
+
+    Returns ``(new_buffers, new_err, out_q, out_s)``.  Quantization math
+    is :mod:`repro.kernels.quant_ops` (bit-identical to the jnp oracle).
+    On TPU the in-kernel (1, bs) -> (nb, qb) relayouts want qb to be a
+    multiple of 128 lanes; the default QBLOCK=256 satisfies this.
+    """
+    R, nslots, bs = buffers.shape
+    nb = smsg.shape[1]
+    assert bs % nb == 0, (bs, nb)
+    qb = bs // nb
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R, 2),
+        in_specs=[
+            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
+            pl.BlockSpec((1, nb), lambda r, s, ai, fi: (r, 0)),
+            # read-only buffer view: the fwd block (pre-update content)
+            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
+            # aliased buffer: acc block at s=0, fwd block at s=1
+            pl.BlockSpec(
+                (1, 1, bs),
+                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
+            ),
+            # aliased err buffer: always the fwd block
+            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, bs),
+                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
+            ),
+            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
+            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
+            pl.BlockSpec((1, nb), lambda r, s, ai, fi: (r, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, bs), jnp.int8),
+            pltpu.VMEM((1, nb), jnp.float32),
+            pltpu.VMEM((1, bs), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_qacc_shuffle_kernel, nb=nb, qb=qb)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, nslots, bs), jnp.float32),
+            jax.ShapeDtypeStruct((R, nslots, bs), jnp.float32),
+            jax.ShapeDtypeStruct((R, bs), jnp.int8),
+            jax.ShapeDtypeStruct((R, nb), jnp.float32),
+        ],
+        # operands counted including the 2 prefetch scalars:
+        # 5 = 2nd buffer operand -> new_buffers, 6 = err -> new_err
+        input_output_aliases={5: 0, 6: 1},
+        interpret=_resolve(interpret),
+    )(acc_idx.astype(jnp.int32), fwd_idx.astype(jnp.int32),
+      qmsg, smsg, buffers, buffers, err)

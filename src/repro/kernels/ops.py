@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from .block_pack import (
     block_acc_shuffle,
     block_pack,
+    block_qacc_shuffle,
     block_shuffle,
     block_unpack,
     default_interpret,
@@ -137,3 +138,18 @@ def schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, *, op="sum",
     """Fused accumulate(t)+capture/drain(t+1) round step (reduce family)."""
     return _schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, op=op,
                                  interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _schedule_qacc_shuffle(buffers, err, qmsg, smsg, acc_idx, fwd_idx, *,
+                           interpret):
+    return block_qacc_shuffle(buffers, err, qmsg, smsg, acc_idx, fwd_idx,
+                              interpret=interpret)
+
+
+def schedule_qacc_shuffle(buffers, err, qmsg, smsg, acc_idx, fwd_idx, *,
+                          interpret=None):
+    """Quantized-wire accumulate(t)+requantize/capture/drain(t+1) round
+    step (sum reduce with per-hop error capture, see block_qacc_shuffle)."""
+    return _schedule_qacc_shuffle(buffers, err, qmsg, smsg, acc_idx, fwd_idx,
+                                  interpret=resolve_interpret(interpret))

@@ -66,6 +66,45 @@ def block_acc_shuffle_ref(buffers, msg, acc_idx, fwd_idx, op="sum"):
     return buffers, out
 
 
+def block_qacc_shuffle_ref(buffers, err, qmsg, smsg, acc_idx, fwd_idx):
+    """Quantized accumulate+capture/drain oracle (sum only).
+
+    The incoming message is int8 blocks ``qmsg`` [R, bs] with per-QBLOCK
+    scales ``smsg`` [R, nb] (bs == nb * qb): dequantize, accumulate into
+    the acc slots of the f32 ``buffers`` [R, nslots, bs], capture the fwd
+    slots from the updated buffer, quantize the captured partial for the
+    wire, record the requantization error into the matching slot of
+    ``err`` [R, nslots, bs], then drain the fwd slots to zero.
+
+    Returns (new_buffers, new_err, out_q [R, bs] int8, out_s [R, nb] f32).
+    """
+    from .quant_ops import dequant_blocks, quant_blocks, quant_error
+
+    R, _, bs = buffers.shape
+    nb = smsg.shape[1]
+    qb = bs // nb
+    rows = jnp.arange(R)
+
+    deq = dequant_blocks(
+        qmsg.reshape(R * nb, qb), smsg.reshape(R * nb, 1)
+    ).reshape(R, bs)
+    cur = jnp.take_along_axis(buffers, acc_idx[:, None, None], axis=1)[:, 0]
+    buffers = buffers.at[rows, acc_idx].set(
+        cur + deq, mode="promise_in_bounds"
+    )
+
+    captured = jnp.take_along_axis(buffers, fwd_idx[:, None, None], axis=1)[:, 0]
+    q, s = quant_blocks(captured.reshape(R * nb, qb))
+    eps = quant_error(captured.reshape(R * nb, qb), q, s).reshape(R, bs)
+    cur_e = jnp.take_along_axis(err, fwd_idx[:, None, None], axis=1)[:, 0]
+    err = err.at[rows, fwd_idx].set(cur_e + eps, mode="promise_in_bounds")
+
+    buffers = buffers.at[rows, fwd_idx].set(
+        jnp.zeros_like(captured), mode="promise_in_bounds"
+    )
+    return buffers, err, q.reshape(R, bs), s.reshape(R, nb)
+
+
 def ssd_ref(x, B_, C_, dt, A_log, D):
     """Sequential SSD recurrence oracle.  x: [BH, S, P]; B_/C_: [BH, S, N];
     dt: [BH, S]; A_log/D: scalars per row [BH]."""

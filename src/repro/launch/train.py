@@ -21,6 +21,7 @@ if __name__ == "__main__" and "--devices" in sys.argv:
     os.environ.setdefault("XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
 
 import argparse
+import math
 import time
 
 import jax
@@ -58,6 +59,12 @@ def main():
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--grad-sync", default="auto",
+                    choices=("auto", "compressed"),
+                    help="'compressed' = int8 quantized circulant "
+                         "allreduce with error feedback (pure-dp mesh)")
+    ap.add_argument("--grad-sync-backend", default="jnp",
+                    choices=("jnp", "pallas"))
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=10)
@@ -67,23 +74,43 @@ def main():
     dp_axes, model_axis = mesh_axes(mesh)
     dp = int(np.prod([mesh.shape[a] for a in dp_axes]))
     set_global_mesh(mesh)
-    hints.set_hint("hidden", P(dp_axes, None, None))
-    hints.set_hint("logits", P(dp_axes, None, model_axis))
+    if args.grad_sync == "auto":
+        # GSPMD layout hints.  The compressed path runs the model inside
+        # shard_map (every mesh axis manual), where sharding constraints
+        # are both illegal and pointless -- shards are explicit already.
+        hints.set_hint("hidden", P(dp_axes, None, None))
+        hints.set_hint("logits", P(dp_axes, None, model_axis))
     print(f"mesh {dict(mesh.shape)}  dp={dp}")
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    microbatches = args.microbatches
+    if args.grad_sync == "compressed":
+        # The compressed step microbatches the per-rank shard (the model
+        # runs inside shard_map), so the split must divide batch/dp.
+        local = max(1, args.global_batch // dp)
+        microbatches = math.gcd(microbatches, local)
+        if microbatches != args.microbatches:
+            print(f"grad-sync=compressed: microbatches "
+                  f"{args.microbatches} -> {microbatches} "
+                  f"(must divide per-rank batch {local})")
     tcfg = TrainConfig(
-        microbatches=args.microbatches, remat="full",
+        microbatches=microbatches, remat="full",
         opt=AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps),
         dp_axes=dp_axes,
+        grad_sync=args.grad_sync,
+        grad_sync_backend=args.grad_sync_backend,
     )
     print(f"model {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
 
     # sharded state
-    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0))
+    state = init_train_state(cfg, tcfg, jax.random.PRNGKey(0), mesh=mesh)
     pspecs = param_pspecs(cfg, state["params"], mesh)
     state_specs = {"params": pspecs,
                    "opt": {"mu": pspecs, "nu": pspecs, "step": P()}}
+    if "gsync_err" in state:
+        # error-feedback buckets: [dp, bucket] rows, one per dp shard
+        state_specs["gsync_err"] = tuple(
+            P(dp_axes) for _ in state["gsync_err"])
     state = jax.device_put(state, named(mesh, state_specs))
 
     data = SyntheticLM(DataConfig(vocab=cfg.vocab, seq_len=args.seq,
@@ -99,7 +126,7 @@ def main():
     # leaves after step 1, which then mismatches in_shardings (and
     # silently drifts the state layout on any jax version).
     step_fn = jax.jit(
-        make_train_step(cfg, tcfg),
+        make_train_step(cfg, tcfg, mesh=mesh),
         in_shardings=(named(mesh, state_specs), bnamed),
         out_shardings=(named(mesh, state_specs), None),
         donate_argnums=(0,),

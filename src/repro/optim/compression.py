@@ -1,42 +1,104 @@
 """Gradient compression with error feedback (distributed-optimization trick).
 
-``compressed_psum_ring`` is an int8-on-the-wire all-reduce implemented as
-a ring reduce-scatter followed by a ring all-gather, both transporting
-int8 payloads (plus tiny per-block f32 scales) via ``lax.ppermute``.
-Partial sums are kept in int32/float32 locally and re-quantized before
-each hop; the re-quantization error is returned to the caller and folded
-into the next step's gradient ("error feedback", Karimireddy et al.
-2019), keeping the optimizer unbiased to first order.
+Two int8-on-the-wire transports implement the lossy mean-allreduce:
 
-Wire volume: 2*(p-1)/p * m bytes of int8 (+ scales) versus
-2*(p-1)/p * 4m bytes for an f32 ring all-reduce -- a 4x reduction, which
-the roofline's collective term sees directly.
+  * ``transport="circulant"`` (default) -- the quantized circulant
+    allreduce of :mod:`repro.core.comm` (``2(n-1)+2*ceil(log2 p)``
+    rounds, the paper's round-optimal schedule with the wire carrying
+    int8 blocks + per-block f32 scales and every requantization error
+    captured in the fused round step);
+  * ``transport="ring"`` -- the legacy ring reduce-scatter/all-gather
+    (``2(p-1)`` hops), kept as the baseline.
+
+Error-feedback convention (Karimireddy et al. 2019), used everywhere in
+this module: **error leaves are f32 and live in SUM units** -- each rank
+keeps exactly the quantization error *it generated* (per-hop
+requantization + its share of the final quantize), so that
+
+    exact_mean == returned_mean + psum(errors) / p        (completeness)
+
+holds to f32 accumulation tolerance.  Feeding ``g + e`` into the next
+mean-allreduce therefore restores the lost mass exactly.  Two historical
+bugs made the old accounting first-order wrong:
+
+  * per-hop requantization error was dropped with a comment calling it
+    second order -- it is first order and compounds with p (each of the
+    p-1 hops requantizes a running partial sum);
+  * the final-quantize error was recorded in MEAN units (post ``/p``),
+    undercounting the fed-back mass by a factor of p.
+
+Non-finite gradients: quantization flags a block containing NaN/inf via
+a NaN scale (see :mod:`repro.kernels.quant_ops`), so the block
+dequantizes to all-NaN deterministically on every rank -- visible to
+grad-norm guards -- while the error feedback for that block is exactly
+zero (never poisoned).
+
+Wire volume for m f32 elements: ~2m int8 bytes (+ scales) versus 8m f32
+bytes for an uncompressed allreduce -- a 4x reduction the roofline's
+collective term sees directly; the circulant transport additionally
+replaces the ring's 2(p-1) latency terms with 2(n-1)+2*ceil(log2 p)
+(see docs/gradsync.md for the full table).
 """
 
 from __future__ import annotations
 
-from typing import Any, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-BLOCK = 256
+from repro.kernels.quant_ops import (
+    QBLOCK,
+    block_nonfinite,
+    dequant_blocks,
+    quant_blocks,
+    quant_error,
+)
+
+#: Quantization block length (elements sharing one f32 scale).
+BLOCK = QBLOCK
+
+__all__ = [
+    "BLOCK",
+    "quantize_int8",
+    "dequantize_int8",
+    "block_nonfinite",
+    "init_error_state",
+    "compressed_psum_ring",
+    "compressed_allreduce_tree",
+    "BucketSpec",
+    "make_bucket_spec",
+    "bucketize",
+    "unbucketize",
+    "init_grad_sync_state",
+    "compressed_grad_sync",
+]
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-block symmetric int8 quantization of a [N] f32 vector (N % BLOCK == 0)."""
-    blocks = x.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale.astype(jnp.float32)
+    """Per-block symmetric int8 quantization of a [N] f32 vector
+    (N % BLOCK == 0) -> (q [nb, BLOCK] int8, scale [nb, 1] f32).
+
+    A block containing any NaN/inf gets a NaN scale (the per-block
+    nonfinite flag, see :func:`block_nonfinite`); its finite lanes are
+    still quantized against the finite amax, so a single bad lane no
+    longer silently poisons the other 255.
+    """
+    return quant_blocks(x.reshape(-1, BLOCK))
 
 
 def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
-    return (q.astype(jnp.float32) * scale).reshape(-1)
+    """Inverse of :func:`quantize_int8` -> flat [N] f32 (flagged blocks
+    dequantize to all-NaN deterministically)."""
+    return dequant_blocks(q, scale).reshape(-1)
 
 
 def init_error_state(params):
+    """Zero-initialized error-feedback state: f32 leaves regardless of
+    the gradient dtype (bf16/f16 error state would quantize the
+    feedback itself away)."""
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
@@ -47,34 +109,46 @@ def _rot(p: int, s: int):
 def compressed_psum_ring(flat: jnp.ndarray, axis_name: str, p: int):
     """int8 ring all-reduce (mean) of a flat f32 vector inside shard_map.
 
-    flat length must be divisible by p * BLOCK (caller pads).  Returns the
-    mean-reduced vector and the local quantization error (for feedback).
+    flat length must be divisible by p * BLOCK (caller pads).  Returns
+    ``(mean, err)``: the mean-reduced vector and this rank's locally
+    generated quantization error in SUM units (every per-hop
+    requantization error plus the final quantize of the segment this
+    rank owns), satisfying the completeness invariant of the module
+    docstring.
     """
     if p == 1:
         return flat, jnp.zeros_like(flat)
     segs = flat.reshape(p, -1)            # [p, m/p]
     r = jax.lax.axis_index(axis_name)
+    err = jnp.zeros_like(segs)
 
     # ---- reduce-scatter: after p-1 hops rank r holds the full sum of
     # segment r.  Each hop ships the partially-reduced segment as int8
-    # (+ f32 block scales); partials accumulate locally in f32.
+    # (+ f32 block scales); partials accumulate locally in f32.  The
+    # requantization error of every hop is captured into the row of the
+    # segment being shipped (hop h ships segment (r+1+h) % p, so each
+    # row is written exactly once).
     send_seg = jnp.take(segs, (r + 1) % p, axis=0)
     for h in range(p - 1):
         q, s = quantize_int8(send_seg)
+        eh = quant_error(send_seg.reshape(-1, BLOCK), q, s).reshape(-1)
+        err = jax.lax.dynamic_update_slice(
+            err, eh[None], ((r + 1 + h) % p, 0))
         q = jax.lax.ppermute(q, axis_name, _rot(p, p - 1))  # r -> r-1
         s = jax.lax.ppermute(s, axis_name, _rot(p, p - 1))
         got = dequantize_int8(q, s)
         nxt = (r + 2 + h) % p
         send_seg = jnp.take(segs, nxt, axis=0) + got
-    my_sum = send_seg / p                 # mean of segment r
-    # (per-hop requantization errors are second order and not fed back;
-    # the final quantization below is covered by error feedback.)
 
-    # ---- all-gather the reduced segments (int8 on the wire)
-    q, s = quantize_int8(my_sum)
-    e_local = my_sum - dequantize_int8(q, s)
+    # ---- all-gather the reduced segment SUMS (int8 on the wire); the
+    # final-quantize error stays in sum units in this rank's own row.
+    q, s = quantize_int8(send_seg)
+    err = jax.lax.dynamic_update_slice(
+        err, quant_error(send_seg.reshape(-1, BLOCK), q, s).reshape(-1)[None],
+        (r, 0))
     out = jnp.zeros_like(segs)
-    out = jax.lax.dynamic_update_slice(out, dequantize_int8(q, s)[None], (r, 0))
+    out = jax.lax.dynamic_update_slice(out, dequantize_int8(q, s)[None],
+                                       (r, 0))
     cur_q, cur_s = q, s
     for h in range(1, p):
         cur_q = jax.lax.ppermute(cur_q, axis_name, _rot(p, 1))
@@ -83,32 +157,200 @@ def compressed_psum_ring(flat: jnp.ndarray, axis_name: str, p: int):
         out = jax.lax.dynamic_update_slice(
             out, dequantize_int8(cur_q, cur_s)[None], (src, 0)
         )
-    err_total = jnp.zeros_like(segs).at[r].set(e_local).reshape(-1)
-    return out.reshape(-1), err_total
+    return out.reshape(-1) / p, err.reshape(-1)
 
 
-def compressed_allreduce_tree(grads, errors, axis_name: str, p: int):
-    """Apply compressed_psum_ring leaf-wise with error feedback.
+def _cast_with_delta(red: jnp.ndarray, dtype) -> Tuple[jnp.ndarray,
+                                                       jnp.ndarray]:
+    """Downcast the f32 mean to the gradient dtype, returning the cast
+    value and the per-element loss.  Every rank sees the same loss, so
+    adding it to each rank's error leaf injects p * delta into the next
+    sum -- exactly the delta the next mean needs (sum-unit convention).
+    Non-finite deltas (NaN gradients) contribute zero, like
+    quant_error."""
+    cast = red.astype(dtype)
+    if np.dtype(dtype) == np.float32:
+        return cast, jnp.zeros_like(red)
+    delta = red - cast.astype(jnp.float32)
+    return cast, jnp.where(jnp.isfinite(delta), delta, 0.0)
 
-    grads/errors: pytrees of f32 leaves (must be called inside shard_map
-    over ``axis_name`` with every leaf replicated across that axis aside
-    from the gradient values themselves).
-    Returns (mean_grads, new_errors).
+
+def compressed_allreduce_tree(grads, errors, axis_name: str, p: int, *,
+                              transport: str = "circulant",
+                              backend: str = "jnp",
+                              n_blocks: Optional[int] = None,
+                              qblock: Optional[int] = None):
+    """Lossy mean-allreduce of a gradient pytree with error feedback.
+
+    Must be called inside shard_map over ``axis_name``.  ``errors`` is
+    the previous step's error state (f32 leaves, SUM units; start from
+    :func:`init_error_state`).  Gradient leaves may be bf16/f16/f32:
+    sub-f32 leaves are widened to f32 for the transport and the mean is
+    cast back, with the downcast loss folded into the returned error
+    state (the error state itself always stays f32).  Ragged leaf sizes
+    are padded internally; the padded tail's error is folded back into
+    the last real element, so truncation never drops error mass.
+    Returns ``(mean_grads, new_errors)``.
     """
-    def one(g, e):
-        target = g.astype(jnp.float32) + e
-        n = target.size
-        pad = (-n) % (p * BLOCK)
-        flat = jnp.pad(target.reshape(-1), (0, pad))
-        red, err = compressed_psum_ring(flat, axis_name, p)
-        red = red[:n].reshape(g.shape)
-        err = err[:n].reshape(g.shape)
-        return red.astype(g.dtype), err
-
+    if transport not in ("circulant", "ring"):
+        raise ValueError(f"unknown transport {transport!r} "
+                         "(use 'circulant' or 'ring')")
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = treedef.flatten_up_to(errors)
-    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
-    return (
-        treedef.unflatten([o[0] for o in outs]),
-        treedef.unflatten([o[1] for o in outs]),
-    )
+    targets = [g.astype(jnp.float32).reshape(-1) + e.reshape(-1)
+               for g, e in zip(flat_g, flat_e)]
+
+    if transport == "circulant":
+        from repro.core.comm import circulant_qallreduce_body
+
+        sums, errs = circulant_qallreduce_body(
+            targets, axis_name, p, n_blocks=n_blocks, backend=backend,
+            qblock=qblock)
+        means = [s / p for s in sums]
+    else:
+        qb = BLOCK if qblock is None else int(qblock)
+        means, errs = [], []
+        for tgt in targets:
+            size = tgt.shape[0]
+            pad = (-size) % (p * qb)
+            red, e = compressed_psum_ring(jnp.pad(tgt, (0, pad)),
+                                          axis_name, p)
+            # fold the padded tail's error back into the last real
+            # element (provably zero for exact-zero padding, but the
+            # truncation must never be able to drop error mass).
+            e = e[:size].at[size - 1].add(jnp.sum(e[size:]))
+            means.append(red[:size])
+            errs.append(e)
+
+    outs, new_errs = [], []
+    for g, m, e in zip(flat_g, means, errs):
+        cast, delta = _cast_with_delta(m, g.dtype)
+        outs.append(cast.reshape(g.shape))
+        new_errs.append((e + delta).reshape(g.shape))
+    return treedef.unflatten(outs), treedef.unflatten(new_errs)
+
+
+# ----------------------------------------------------- gradient buckets
+#
+# The trainer syncs gradients per *bucket*, not per leaf: a frozen
+# BucketSpec groups leaves greedily (flatten order) into ~bucket_bytes
+# f32 buckets, so one quantized-allreduce plan per bucket spec is frozen
+# once and reused every step via the process-wide plan cache, and small
+# leaves amortize round latency instead of each paying it.
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """Frozen leaf->bucket assignment for a parameter tree (hashable, so
+    it can key plan caches).  ``assignment[i]`` is the bucket of leaf i
+    (flatten order), ``offsets[i]`` its element offset inside that
+    bucket, ``bucket_sizes[b]`` the total f32 elements of bucket b."""
+
+    leaf_sizes: Tuple[int, ...]
+    assignment: Tuple[int, ...]
+    offsets: Tuple[int, ...]
+    bucket_sizes: Tuple[int, ...]
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+
+def make_bucket_spec(params, bucket_bytes: int = 4 << 20) -> BucketSpec:
+    """Greedy bucketization of a pytree's leaves in flatten order.
+
+    ``params`` may hold arrays or ``ShapeDtypeStruct``s.  Buckets are
+    filled to ~``bucket_bytes`` of f32 payload (4 bytes/element); a
+    leaf larger than the budget gets its own bucket.
+    """
+    leaves = jax.tree.leaves(params)
+    if not leaves:
+        raise ValueError("params tree has no array leaves")
+    budget = max(1, int(bucket_bytes) // 4)
+    sizes, assignment, offsets, bucket_sizes = [], [], [], []
+    cur = 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        if bucket_sizes and cur + n > budget and cur > 0:
+            bucket_sizes[-1] = cur
+            bucket_sizes.append(0)
+            cur = 0
+        if not bucket_sizes:
+            bucket_sizes.append(0)
+        assignment.append(len(bucket_sizes) - 1)
+        offsets.append(cur)
+        sizes.append(n)
+        cur += n
+    bucket_sizes[-1] = cur
+    return BucketSpec(leaf_sizes=tuple(sizes), assignment=tuple(assignment),
+                      offsets=tuple(offsets),
+                      bucket_sizes=tuple(bucket_sizes))
+
+
+def bucketize(tree, spec: BucketSpec) -> List[jnp.ndarray]:
+    """Flatten a pytree into ``spec``'s f32 bucket vectors."""
+    leaves = jax.tree.leaves(tree)
+    if len(leaves) != len(spec.leaf_sizes):
+        raise ValueError(f"tree has {len(leaves)} leaves, spec expects "
+                         f"{len(spec.leaf_sizes)}")
+    parts: List[List[jnp.ndarray]] = [[] for _ in spec.bucket_sizes]
+    for leaf, b in zip(leaves, spec.assignment):
+        parts[b].append(leaf.astype(jnp.float32).reshape(-1))
+    out = []
+    for b, chunk in enumerate(parts):
+        v = jnp.concatenate(chunk) if len(chunk) > 1 else chunk[0]
+        if v.shape[0] != spec.bucket_sizes[b]:
+            raise ValueError(f"bucket {b} has {v.shape[0]} elements, "
+                             f"spec expects {spec.bucket_sizes[b]}")
+        out.append(v)
+    return out
+
+
+def unbucketize(flats: Sequence[jnp.ndarray], spec: BucketSpec, like):
+    """Inverse of :func:`bucketize`: slice bucket vectors back into a
+    tree shaped (and dtyped) like ``like``.  Returns ``(tree, deltas)``
+    where ``deltas`` are per-bucket f32 downcast-loss vectors (zero for
+    f32 leaves) for the error-feedback accounting."""
+    leaves, treedef = jax.tree.flatten(like)
+    outs = []
+    deltas = [jnp.zeros((s,), jnp.float32) for s in spec.bucket_sizes]
+    for leaf, b, off, n in zip(leaves, spec.assignment, spec.offsets,
+                               spec.leaf_sizes):
+        sl = jax.lax.dynamic_slice(flats[b], (off,), (n,))
+        cast, delta = _cast_with_delta(sl, leaf.dtype)
+        outs.append(cast.reshape(leaf.shape))
+        deltas[b] = jax.lax.dynamic_update_slice(deltas[b], delta, (off,))
+    return treedef.unflatten(outs), deltas
+
+
+def init_grad_sync_state(spec: BucketSpec, dp: int = 1):
+    """Zero error-feedback buckets for :func:`compressed_grad_sync`:
+    a tuple of [dp, bucket_size] f32 arrays (leading axis sharded over
+    the dp axis by the trainer; ``dp=1`` for unsharded use)."""
+    return tuple(jnp.zeros((dp, s), jnp.float32) for s in spec.bucket_sizes)
+
+
+def compressed_grad_sync(grads, err_buckets, axis_name: str, p: int,
+                         spec: BucketSpec, *, backend: str = "jnp",
+                         n_blocks: Optional[int] = None,
+                         qblock: Optional[int] = None):
+    """Bucketized quantized-circulant gradient sync (inside shard_map).
+
+    ``grads``: the local (unreduced) gradient pytree; ``err_buckets``: a
+    sequence of flat [bucket_size] f32 error vectors (this rank's rows
+    of :func:`init_grad_sync_state`).  All buckets ride ONE quantized
+    circulant allreduce call -- one shared schedule, one plan.  Returns
+    ``(mean_grads, new_err_buckets)`` with mean_grads in the gradient
+    dtypes and errors satisfying the completeness invariant.
+    """
+    from repro.core.comm import circulant_qallreduce_body
+
+    flats = bucketize(grads, spec)
+    targets = [f + e.reshape(-1) for f, e in zip(flats, err_buckets)]
+    sums, errs = circulant_qallreduce_body(
+        targets, axis_name, p, n_blocks=n_blocks, backend=backend,
+        qblock=qblock)
+    means = [s / p for s in sums]
+    mean_tree, deltas = unbucketize(means, spec, grads)
+    new_errs = tuple(e + d for e, d in zip(errs, deltas))
+    return mean_tree, new_errs

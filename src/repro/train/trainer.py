@@ -9,9 +9,13 @@ function suitable for jit with in/out shardings:
   * remat: 'none' | 'full' | 'dots' activation checkpointing over the
     layer scan;
   * grad_sync: 'auto' leaves the gradient reduction to GSPMD (it fuses
-    the reduce into the backward); 'compressed' runs the explicit int8
-    ring all-reduce with error feedback over the dp axes (see
-    optim/compression.py).
+    the reduce into the backward); 'compressed' runs the explicit
+    int8-on-the-wire quantized circulant all-reduce with complete error
+    feedback over the data-parallel axis (see optim/compression.py):
+    gradients are bucketized over the comm pytree API, each bucket spec
+    freezes exactly one quantized-allreduce plan reused every step via
+    the process-wide plan cache, and the per-rank error-feedback buckets
+    ride in the train state under ``state["gsync_err"]``.
 """
 
 from __future__ import annotations
@@ -22,10 +26,17 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.models.common import ModelConfig
 from repro.models.transformer import init_params, loss_fn
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
+from repro.optim.compression import (
+    compressed_grad_sync,
+    init_grad_sync_state,
+    make_bucket_spec,
+)
 
 
 @dataclass(frozen=True)
@@ -39,33 +50,69 @@ class TrainConfig:
     # accumulator for capacity-constrained giants (deepseek-v3 on 256
     # chips) at ~3 bits of accumulation precision over 16 microbatches.
     grad_acc_dtype: str = "float32"
+    # compressed grad-sync knobs (ignored for grad_sync='auto'): data
+    # plane backend for the quantized circulant allreduce and the target
+    # f32 payload per gradient bucket.
+    grad_sync_backend: str = "jnp"   # jnp | pallas
+    bucket_bytes: int = 4 << 20
 
 
-def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+def grad_bucket_spec(cfg: ModelConfig, tcfg: TrainConfig):
+    """The frozen gradient BucketSpec for this model/config pair (from
+    abstract parameter shapes; no allocation)."""
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    return make_bucket_spec(shapes, bucket_bytes=tcfg.bucket_bytes)
+
+
+def _dp_size(tcfg: TrainConfig, mesh) -> int:
+    if mesh is None:
+        return 1
+    return int(np.prod([mesh.shape[a] for a in tcfg.dp_axes
+                        if a in mesh.shape]))
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key, mesh=None):
     params = init_params(cfg, key)
-    return {"params": params, "opt": init_opt_state(tcfg.opt, params)}
+    state = {"params": params, "opt": init_opt_state(tcfg.opt, params)}
+    if tcfg.grad_sync == "compressed":
+        spec = grad_bucket_spec(cfg, tcfg)
+        state["gsync_err"] = init_grad_sync_state(spec, _dp_size(tcfg, mesh))
+    return state
 
 
-def train_state_shape(cfg: ModelConfig, tcfg: TrainConfig):
+def train_state_shape(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
     """Abstract train state via eval_shape (no allocation; dry-run path)."""
     return jax.eval_shape(
-        lambda k: init_train_state(cfg, tcfg, k), jax.random.PRNGKey(0)
+        lambda k: init_train_state(cfg, tcfg, k, mesh=mesh),
+        jax.random.PRNGKey(0),
     )
 
 
 def _microbatch(batch: Dict[str, jnp.ndarray], n: int):
-    """[GB, ...] -> [n, GB/n, ...] for scanning."""
+    """[B, ...] -> [n, B/n, ...] for scanning.  B is the global batch
+    under GSPMD and the per-rank shard inside the compressed step's
+    shard_map."""
     def split(x):
         gb = x.shape[0]
-        assert gb % n == 0, f"global batch {gb} % microbatches {n} != 0"
+        assert gb % n == 0, f"batch dim {gb} % microbatches {n} != 0"
         return x.reshape((n, gb // n) + x.shape[1:])
     return jax.tree.map(split, batch)
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
-    def train_step(state, batch):
-        params = state["params"]
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    """Build the (state, batch) -> (state, metrics) step.
 
+    ``grad_sync='auto'`` needs no mesh (GSPMD reduces gradients inside
+    the jitted backward).  ``grad_sync='compressed'`` with a mesh whose
+    data-parallel extent is > 1 wraps the step in shard_map over the dp
+    axis and replaces the gradient reduction with the bucketized
+    quantized circulant allreduce; with no mesh (or dp == 1) it
+    degrades to the plain step, passing the (trivial) error state
+    through unchanged so the state pytree structure is stable.
+    """
+
+    def compute_grads(params, batch):
         def loss_for(p, mb):
             loss, metrics = loss_fn(p, cfg, mb, remat=tcfg.remat)
             return loss, metrics
@@ -95,14 +142,88 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
             metrics = jax.tree.map(lambda m: m[-1], metrics)
         else:
             (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
 
+    def finish(params, opt, grads, loss, metrics):
         new_params, new_opt, opt_metrics = apply_updates(
-            tcfg.opt, params, grads, state["opt"]
+            tcfg.opt, params, grads, opt
         )
         metrics = dict(metrics)
         metrics.update(opt_metrics)
         metrics["loss"] = loss
-        return {"params": new_params, "opt": new_opt}, metrics
+        return new_params, new_opt, metrics
+
+    dp = _dp_size(tcfg, mesh)
+    if tcfg.grad_sync == "compressed" and dp > 1:
+        return _make_compressed_step(cfg, tcfg, mesh, dp,
+                                     compute_grads, finish)
+
+    def train_step(state, batch):
+        loss, metrics, grads = compute_grads(state["params"], batch)
+        new_params, new_opt, metrics = finish(
+            state["params"], state["opt"], grads, loss, metrics
+        )
+        new_state = {"params": new_params, "opt": new_opt}
+        if "gsync_err" in state:
+            # dp == 1: nothing to sync, error state is identically zero.
+            new_state["gsync_err"] = state["gsync_err"]
+        return new_state, metrics
+
+    return train_step
+
+
+def _make_compressed_step(cfg, tcfg, mesh, dp, compute_grads, finish):
+    """shard_map'd train step with bucketized int8 circulant grad sync."""
+    if len(tcfg.dp_axes) != 1:
+        raise ValueError(
+            "grad_sync='compressed' requires a single data-parallel axis; "
+            f"got dp_axes={tcfg.dp_axes!r}"
+        )
+    axis = tcfg.dp_axes[0]
+    other = {a: s for a, s in mesh.shape.items() if a != axis and s != 1}
+    if other:
+        raise ValueError(
+            "grad_sync='compressed' supports pure data parallelism; "
+            f"non-trivial mesh axes {other} present"
+        )
+    spec = grad_bucket_spec(cfg, tcfg)
+    nb = spec.num_buckets
+
+    from repro.core.jaxcompat import shard_map
+
+    def body(params, opt, errs, batch):
+        # Gradients stay local to the shard: the lossy sync below is the
+        # only cross-rank reduction (GSPMD must not insert its own).
+        loss, metrics, grads = compute_grads(params, batch)
+        mean_grads, new_errs = compressed_grad_sync(
+            grads, [e[0] for e in errs], axis, dp, spec,
+            backend=tcfg.grad_sync_backend,
+        )
+        loss = jax.lax.pmean(loss, axis)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, axis), metrics)
+        # apply_updates is deterministic on identical (replicated)
+        # inputs, so params/opt remain replicated without a broadcast.
+        new_params, new_opt, metrics = finish(
+            params, opt, mean_grads, loss, metrics
+        )
+        return new_params, new_opt, tuple(e[None] for e in new_errs), metrics
+
+    sharded_body = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(), (P(axis),) * nb, P(axis)),
+        out_specs=(P(), P(), (P(axis),) * nb, P()),
+        check_vma=False,
+    )
+
+    def train_step(state, batch):
+        new_params, new_opt, new_errs, metrics = sharded_body(
+            state["params"], state["opt"], tuple(state["gsync_err"]), batch
+        )
+        return (
+            {"params": new_params, "opt": new_opt, "gsync_err": new_errs},
+            metrics,
+        )
 
     return train_step
 

@@ -44,6 +44,18 @@ def test_compressed_allreduce_multidevice(p):
     run_worker("compressed", p)
 
 
+def test_compressed_allreduce_pallas_multidevice():
+    run_worker("compressed", 4, backend="pallas")
+
+
+@pytest.mark.parametrize("p", [2, 4])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_gradsync_parity_multidevice(p, backend):
+    """grad_sync='compressed' vs 'auto': bounded loss-trajectory
+    divergence over 20 optimizer steps (end-to-end trainer path)."""
+    run_worker("gradsync", p, backend=backend)
+
+
 @pytest.mark.parametrize("p", [3, 5, 8])
 def test_circulant_reduce_scatter_multidevice(p):
     run_worker("reducescatter", p)

@@ -204,6 +204,47 @@ def test_plan_validates_shapes_at_build():
                               optimal_num_blocks_bcast) == 3
 
 
+def test_quantized_allreduce_plan_validation():
+    """quantized_allreduce plan: op/dtype/qblock constraints, the p==1
+    (sums, zero-errors) fast path, and qblock participating in the
+    plan cache key."""
+    from repro.core.comm import _resolve_quantized, get_comm, payload_spec
+    from repro.core.costmodel import DEFAULT_MODEL
+
+    comm = get_comm(_mesh1(), "data")
+    x = {"g": np.ones((1, 600), np.float32)}
+    plan = comm.plan("quantized_allreduce", x, n_blocks=2, qblock=8)
+    assert plan.qblock == 8
+    assert comm.plan("quantized_allreduce", x, n_blocks=2, qblock=8) is plan
+    assert comm.plan("quantized_allreduce", x, n_blocks=2,
+                     qblock=16) is not plan
+    # p == 1: identity sums + zero error state, same (sums, errs) pair
+    sums, errs = plan(x)
+    np.testing.assert_array_equal(sums["g"], x["g"])
+    np.testing.assert_array_equal(errs["g"], np.zeros_like(x["g"]))
+    # validation: sum-only, f32-only, qblock only for this kind
+    with pytest.raises(ValueError, match="sums"):
+        comm.plan("quantized_allreduce", x, op="max")
+    with pytest.raises(ValueError, match="qblock"):
+        comm.plan("allreduce", x, qblock=8)
+    with pytest.raises(ValueError, match="qblock"):
+        comm.plan("quantized_allreduce", x, qblock=0)
+    spec_bf16 = payload_spec({"g": np.zeros((2, 8), np.float32)
+                              .astype(np.float16)})
+    with pytest.raises(ValueError, match="float32"):
+        _resolve_quantized(spec_bf16, 2, None, DEFAULT_MODEL, 8)
+    spec_bad = payload_spec({"g": np.zeros((3, 8), np.float32)})
+    with pytest.raises(ValueError, match="leading axis"):
+        _resolve_quantized(spec_bad, 2, None, DEFAULT_MODEL, 8)
+    # n clamps so every schedule block spans >= one quantization block
+    spec_small = payload_spec({"g": np.zeros((2, 12), np.float32)})
+    n = _resolve_quantized(spec_small, 2, 64, DEFAULT_MODEL, 8)
+    assert n <= 2, n
+    # shorthand returns the pair too
+    sums2, errs2 = comm.quantized_allreduce(x["g"], n_blocks=2, qblock=8)
+    np.testing.assert_array_equal(sums2, x["g"])
+
+
 def test_allgatherv_sizes_canonicalization():
     from repro.core.comm import _canon_sizes, payload_spec
 

@@ -1,0 +1,299 @@
+"""int8 compression + quantized circulant allreduce: arithmetic and
+data-plane certification (single process).
+
+The centerpiece certifies the quantized-allreduce host data plane
+bit-for-bit against an independent pure-NumPy replay of the schedule:
+same slot tables, but every quantize / dequantize / accumulate done in
+plain ``np.float32`` ops -- if the jnp oracle or the Pallas kernel
+reorders, fuses (FMA) or widens any arithmetic, the comparison breaks
+in the last bit.  Multi-device behaviour (shard_map, error-feedback
+completeness under psum, trainer parity) lives in test_collectives.py
+via tests/mp_worker.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import host_plan
+from repro.optim.compression import (
+    BLOCK,
+    BucketSpec,
+    block_nonfinite,
+    bucketize,
+    dequantize_int8,
+    init_error_state,
+    make_bucket_spec,
+    quantize_int8,
+    unbucketize,
+)
+
+# --------------------------------------------------------------- NumPy
+# reference arithmetic.  Quantize (amax, scale, round, clip) is plain
+# float32, round-half-even -- both np.round and jnp.round.  The data
+# plane's accumulate (``cur + q*s``) and error capture (``x - q*s``)
+# compile to fused multiply-adds (one rounding, no intermediate f32
+# product); NumPy reproduces an f32 FMA exactly through float64: the
+# product q*s is EXACT in f64 (33-bit significand at most), so
+# f32(f64(cur) + f64(q)*f64(s)) applies the same single rounding.
+
+
+def np_fma(a, q, s, sign=1.0):
+    """f32 fused multiply-add a + sign*q*s, emulated exactly in f64."""
+    out = (np.asarray(a, np.float64) +
+           np.float64(sign) * np.asarray(q, np.float64) *
+           np.asarray(s, np.float64)).astype(np.float32)
+    return out
+
+
+def np_quant_blocks(x2d):
+    x2d = np.asarray(x2d, np.float32)
+    finite = np.isfinite(x2d)
+    xf = np.where(finite, x2d, np.float32(0.0)).astype(np.float32)
+    amax = np.max(np.abs(xf), axis=1, keepdims=True).astype(np.float32)
+    inv127 = np.float32(1.0) / np.float32(127.0)
+    scale = np.maximum(amax * inv127, np.float32(1e-12))
+    q = np.clip(np.round(xf / scale), -127, 127).astype(np.int8)
+    allf = finite.all(axis=1, keepdims=True)
+    return q, np.where(allf, scale, np.float32(np.nan)).astype(np.float32)
+
+
+def np_dequant_blocks(q, scale):
+    return (q.astype(np.float32) * scale).astype(np.float32)
+
+
+def np_quant_error(x2d, q, scale):
+    err = np_fma(x2d, q, np.broadcast_to(scale, x2d.shape), sign=-1.0)
+    return np.where(np.isfinite(err), err, np.float32(0.0)).astype(np.float32)
+
+
+def np_quantized_allreduce(plan, vals):
+    """Pure-NumPy replay of HostDataPlan._run_quantized using the
+    plan's own slot tables: reduce-phase qacc rounds (dequantize ->
+    accumulate -> requantize forward slot -> capture error -> drain),
+    root requantization, then the int8+scales broadcast phase."""
+    p, n, qb = plan.p, plan.n, plan.qblock
+    fwd_slots, acc_slots, recv_slots, send_slots = plan.slots
+    red_skips, bc_skips = plan.skips
+    vals = np.asarray(vals, np.float32)               # [p, n, bs]
+    bs = vals.shape[-1]
+    nb = bs // qb
+    buf = np.concatenate([vals, np.zeros((p, 2, bs), np.float32)], axis=1)
+    err = np.zeros_like(buf)
+
+    def qacc(buf, err, qmsg, smsg, acc_idx, fwd_idx):
+        qout = np.zeros((p, bs), np.int8)
+        sout = np.zeros((p, nb), np.float32)
+        for r in range(p):
+            buf[r, acc_idx[r]] = np_fma(
+                buf[r, acc_idx[r]].reshape(nb, qb),
+                qmsg[r].reshape(nb, qb),
+                np.broadcast_to(smsg[r].reshape(nb, 1), (nb, qb)),
+            ).reshape(bs)
+            captured = buf[r, fwd_idx[r]].reshape(nb, qb)
+            q, s = np_quant_blocks(captured)
+            err[r, fwd_idx[r]] += np_quant_error(captured, q, s).reshape(bs)
+            buf[r, fwd_idx[r]] = 0.0
+            qout[r], sout[r] = q.reshape(bs), s.reshape(nb)
+        return qout, sout
+
+    garbage = np.full((p,), n, np.int64)
+    qm, sm = qacc(buf, err, np.zeros((p, bs), np.int8),
+                  np.zeros((p, nb), np.float32), garbage, fwd_slots[0])
+    R = len(red_skips)
+    for t in range(R):
+        gq = np.roll(qm, -red_skips[t], axis=0)
+        gs = np.roll(sm, -red_skips[t], axis=0)
+        nxt = fwd_slots[t + 1] if t + 1 < R else garbage
+        qm, sm = qacc(buf, err, gq, gs, acc_slots[t], nxt)
+
+    droot = buf[plan.root, :n].reshape(n * nb, qb)
+    q, sc = np_quant_blocks(droot)
+    err[plan.root, :n] += np_quant_error(droot, q, sc).reshape(n, bs)
+    qbuf = np.zeros((p, n + 1, bs), np.int8)
+    qbuf[plan.root, :n] = q.reshape(n, bs)
+    sbuf = np.zeros((p, n + 1, nb), np.float32)
+    sbuf[plan.root, :n] = sc.reshape(n, nb)
+
+    def pack(b, idx):
+        return np.stack([b[r, idx[r]] for r in range(p)])
+
+    msgq, msgs = pack(qbuf, send_slots[0]), pack(sbuf, send_slots[0])
+    Rb = len(bc_skips)
+    for t in range(Rb):
+        gq = np.roll(msgq, bc_skips[t], axis=0)
+        gs = np.roll(msgs, bc_skips[t], axis=0)
+        for r in range(p):
+            qbuf[r, recv_slots[t][r]] = gq[r]
+            sbuf[r, recv_slots[t][r]] = gs[r]
+        if t + 1 < Rb:
+            msgq = pack(qbuf, send_slots[t + 1])
+            msgs = pack(sbuf, send_slots[t + 1])
+    out = np_dequant_blocks(qbuf[:, :n].reshape(p * n * nb, qb),
+                            sbuf[:, :n].reshape(p * n * nb, 1))
+    return out.reshape(p, n, bs), err[:, :n]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+@pytest.mark.parametrize("p,n", [(2, 1), (3, 2), (5, 4), (8, 2)])
+def test_quantized_allreduce_bitexact_vs_numpy(backend, p, n):
+    """Quantized circulant allreduce == independent NumPy replay,
+    bit-for-bit, on both data-plane backends."""
+    qb = 8
+    plan = host_plan("quantized_allreduce", p, n, backend=backend,
+                     qblock=qb)
+    rng = np.random.default_rng(100 * p + n)
+    # high dynamic range across quantization blocks
+    vals = (rng.normal(size=(p, n, 3 * qb)) *
+            10.0 ** rng.integers(-4, 5, size=(p, n, 1))).astype(np.float32)
+    out, err = plan.run(vals)
+    ref_out, ref_err = np_quantized_allreduce(plan, vals)
+    np.testing.assert_array_equal(out, ref_out)
+    np.testing.assert_array_equal(err, ref_err)
+    # every rank's row identical; completeness vs the exact f32 sum
+    for r in range(1, p):
+        np.testing.assert_array_equal(out[r], out[0])
+    exact = vals.astype(np.float64).sum(0)
+    recon = out[0].astype(np.float64) + err.astype(np.float64).sum(0)
+    resid = np.abs(recon - exact)
+    tol = 1e-4 * np.maximum(np.abs(exact), np.abs(vals).max(0) * p) + 1e-7
+    assert (resid <= tol).all(), resid.max()
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_quantized_allreduce_nonfinite_bitexact(backend):
+    """NaN/inf lanes: flagged blocks come back all-NaN on every rank,
+    error state stays finite, and jnp/pallas/NumPy still agree
+    bit-for-bit (NaN positions included)."""
+    p, n, qb = 3, 2, 8
+    plan = host_plan("quantized_allreduce", p, n, backend=backend,
+                     qblock=qb)
+    rng = np.random.default_rng(3)
+    vals = rng.normal(size=(p, n, 3 * qb)).astype(np.float32)
+    vals[1, 0, qb + 2] = np.nan
+    vals[0, 1, 2 * qb] = np.inf
+    out, err = plan.run(vals)
+    ref_out, ref_err = np_quantized_allreduce(plan, vals)
+    np.testing.assert_array_equal(out, ref_out)
+    np.testing.assert_array_equal(err, ref_err)
+    assert np.isfinite(err).all()
+    for r in range(p):
+        assert np.isnan(out[r, 0, qb:2 * qb]).all()
+        assert np.isnan(out[r, 1, 2 * qb:3 * qb]).all()
+        assert np.isfinite(out[r, 0, :qb]).all()
+        assert np.isfinite(out[r, 0, 2 * qb:]).all()
+
+
+def test_host_plan_identity_and_validation():
+    plan = host_plan("quantized_allreduce", 4, 2, qblock=8)
+    assert host_plan("quantized_allreduce", 4, 2, qblock=8) is plan
+    assert host_plan("quantized_allreduce", 4, 2, qblock=16) is not plan
+    with pytest.raises(ValueError, match="qblock"):
+        host_plan("broadcast", 4, 2, qblock=8)
+    with pytest.raises(ValueError, match="sums"):
+        host_plan("quantized_allreduce", 4, 2, op="max")
+
+
+# ------------------------------------------------------------ quantize
+
+
+def test_quantize_nonfinite_blocks():
+    """A NaN or inf poisons exactly its own block -- flagged via a NaN
+    scale, dequantizing to all-NaN -- and neighbouring blocks are
+    untouched; finite lanes of the bad block still quantize sanely."""
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(4 * BLOCK,)).astype(np.float32)
+    v[BLOCK + 3] = np.nan
+    v[2 * BLOCK + 7] = -np.inf
+    q, s = jax.jit(quantize_int8)(jnp.asarray(v))
+    flags = np.asarray(block_nonfinite(s)).reshape(-1)
+    assert flags.tolist() == [False, True, True, False]
+    dq = np.asarray(jax.jit(dequantize_int8)(q, s))
+    assert np.isnan(dq[BLOCK:3 * BLOCK]).all()
+    assert np.isfinite(dq[:BLOCK]).all() and np.isfinite(dq[3 * BLOCK:]).all()
+    # clean blocks round-trip within one quantization step
+    assert np.abs(dq[:BLOCK] - v[:BLOCK]).max() <= np.abs(v[:BLOCK]).max() / 127
+    # the bad block's finite lanes were quantized against the finite
+    # amax (wire content preserved modulo the flag)
+    qb = np.asarray(q).reshape(4, BLOCK)[1]
+    fin = np.isfinite(v[BLOCK:2 * BLOCK])
+    assert np.abs(qb[fin]).max() > 0
+
+
+def test_quantize_zero_and_tiny_blocks():
+    """All-zero and denormal-scale blocks: the 1e-12 scale floor must
+    yield exact zeros (not garbage) and zero error."""
+    v = np.zeros((2 * BLOCK,), np.float32)
+    v[BLOCK:] = 1e-30
+    q, s = quantize_int8(jnp.asarray(v))
+    assert not np.asarray(block_nonfinite(s)).any()
+    dq = np.asarray(dequantize_int8(q, s))
+    np.testing.assert_array_equal(dq[:BLOCK], 0.0)
+    # sub-floor magnitudes quantize to exact zero (their full value is
+    # the quantization error, recovered by the feedback loop)
+    np.testing.assert_array_equal(dq[BLOCK:], 0.0)
+
+
+def test_error_state_is_f32_for_low_precision_params():
+    params = {"a": jnp.zeros((3, 4), jnp.bfloat16),
+              "b": jnp.zeros((7,), jnp.float16)}
+    err = init_error_state(params)
+    assert all(e.dtype == jnp.float32 for e in jax.tree.leaves(err))
+
+
+# ------------------------------------------------------------- buckets
+
+
+def test_bucket_spec_and_roundtrip_ragged():
+    shapes = {"w1": (17, 9), "b1": (9,), "w2": (9, 23), "b2": (23,),
+              "scalar": ()}
+    params = {k: jnp.zeros(s, jnp.float32) for k, s in shapes.items()}
+    spec = make_bucket_spec(params, bucket_bytes=4 * 150)
+    assert isinstance(spec, BucketSpec)
+    assert spec.num_buckets > 1
+    assert sum(spec.bucket_sizes) == sum(
+        int(np.prod(s)) if s else 1 for s in shapes.values())
+    assert hash(spec) == hash(make_bucket_spec(params, bucket_bytes=4 * 150))
+
+    rng = np.random.default_rng(5)
+    tree = {k: jnp.asarray(rng.normal(size=s).astype(np.float32))
+            for k, s in shapes.items()}
+    flats = bucketize(tree, spec)
+    assert [f.shape[0] for f in flats] == list(spec.bucket_sizes)
+    back, deltas = unbucketize(flats, spec, tree)
+    for k in shapes:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(tree[k]))
+    assert all(not np.asarray(d).any() for d in deltas)
+
+
+def test_bucket_oversized_leaf_gets_own_bucket():
+    # dict leaves flatten in key order: huge, small, tail
+    params = {"small": jnp.zeros((10,)), "huge": jnp.zeros((1000,)),
+              "tail": jnp.zeros((5,))}
+    spec = make_bucket_spec(params, bucket_bytes=4 * 64)
+    assert spec.num_buckets == 2
+    assert spec.bucket_sizes == (1000, 15)
+    assert spec.assignment == (0, 1, 1)
+
+
+def test_unbucketize_downcast_delta():
+    """bf16 leaves: the downcast loss lands in the delta vectors (the
+    error-feedback hook), and cast + delta reconstructs f32 exactly."""
+    tree = {"x": jnp.zeros((300,), jnp.bfloat16)}
+    spec = make_bucket_spec(tree)
+    rng = np.random.default_rng(9)
+    flat = jnp.asarray(rng.normal(size=300).astype(np.float32))
+    out, deltas = unbucketize([flat], spec, tree)
+    assert out["x"].dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(out["x"], np.float32) + np.asarray(deltas[0]),
+        np.asarray(flat), rtol=0, atol=0)
+    assert np.asarray(deltas[0]).any()
+
+
+def test_bucketize_validates_leaf_count():
+    spec = make_bucket_spec({"a": jnp.zeros((4,))})
+    with pytest.raises(ValueError, match="leaves"):
+        bucketize({"a": jnp.zeros((4,)), "b": jnp.zeros((4,))}, spec)

@@ -12,6 +12,7 @@ from repro.kernels.ops import (
     mamba2_ssd,
     schedule_acc_shuffle,
     schedule_pack,
+    schedule_qacc_shuffle,
     schedule_shuffle,
     schedule_unpack,
 )
@@ -19,6 +20,7 @@ from repro.kernels.ref import (
     attention_ref,
     block_acc_shuffle_ref,
     block_pack_ref,
+    block_qacc_shuffle_ref,
     block_shuffle_ref,
     block_unpack_ref,
     ssd_ref,
@@ -158,6 +160,37 @@ def test_block_acc_shuffle(op, dtype, R, ns, bs):
     rb, rm = block_acc_shuffle_ref(buf, msg, acc, fwd, op=op)
     np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
     np.testing.assert_array_equal(np.asarray(km), np.asarray(rm))
+
+
+@pytest.mark.parametrize("R,ns,nb,qb", [(4, 4, 3, 8), (8, 6, 2, 128),
+                                        (17, 5, 4, 16)])
+def test_block_qacc_shuffle(R, ns, nb, qb):
+    """Quantized accumulate+requantize/capture/drain vs the JITTED jnp
+    oracle, bit-for-bit -- the jit matters: both lower the error
+    capture to a fused multiply-add, which the eager oracle does not.
+    Covers acc==fwd coincidence and NaN-flagged scale blocks."""
+    bs = nb * qb
+    buf = jnp.asarray(
+        (RNG.normal(size=(R, ns, bs)) *
+         10.0 ** RNG.integers(-3, 4, size=(R, ns, 1))), jnp.float32)
+    err = jnp.asarray(RNG.normal(size=(R, ns, bs)) * 1e-3, jnp.float32)
+    qmsg = jnp.asarray(RNG.integers(-127, 128, size=(R, bs)), jnp.int8)
+    smsg = jnp.asarray(10.0 ** RNG.uniform(-5, 2, size=(R, nb)), jnp.float32)
+    smsg = smsg.at[1, 0].set(jnp.nan)       # flagged incoming block
+    acc = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    fwd = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    fwd = fwd.at[0].set(acc[0])             # capture the fresh partial
+    acc = acc.at[1].set(1)                  # flagged row: acc != fwd so the
+    fwd = fwd.at[1].set(2)                  # poisoned slot survives drain
+    out = schedule_qacc_shuffle(buf, err, qmsg, smsg, acc, fwd)
+    ref = jax.jit(block_qacc_shuffle_ref)(buf, err, qmsg, smsg, acc, fwd)
+    for k, r in zip(out, ref):
+        np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+    # NaN flag propagated: the accumulated slot of row 1 contains the
+    # poisoned first quant-block
+    nb_buf = np.asarray(out[0])
+    assert np.isnan(nb_buf[1, int(acc[1])][:qb]).all()
+    assert np.isfinite(np.asarray(out[1])).all()  # error never poisoned
 
 
 def test_block_pack_with_real_schedule():
