@@ -71,6 +71,13 @@ def main() -> None:
         bcast_bench.roundstep_main()
         allreduce_bench.roundstep_main()
 
+    if which in ("analysis", "all"):
+        print("# === Static analysis: per-pass analyzer runtime ===")
+        from repro.analysis.__main__ import main as analysis_main
+
+        rc = analysis_main(["--all", "--bench", "BENCH_analysis.json"])
+        assert rc == 0, "static analysis found violations"
+
     if which in ("verify", "all"):
         print("# === Correctness sweep (paper section 3 verification) ===")
         from repro.core.verify import verify_p

@@ -1,0 +1,68 @@
+"""Static analysis for the schedule stack: prove safety without running.
+
+Three passes over the repo's *frozen artifacts* (cached plan tables,
+kernel audit records, source text), one CLI (``python -m
+repro.analysis``):
+
+  * :mod:`repro.analysis.planaudit` -- per-round safety of any plan's
+    static slot tables: write-once slots, RAW ordering, exchange
+    consistency, closed-form round counts, bundle consistency, cache
+    immutability;
+  * :mod:`repro.analysis.kernelaudit` -- the Pallas data-plane race
+    detector: replays every BlockSpec index map over the grid and flags
+    write-write overlap, live read-back of earlier-written blocks (the
+    interpret/compiled divergence hazard) and alias/dtype drift
+    (imports jax for tracing; loaded lazily);
+  * :mod:`repro.analysis.lint` -- AST conventions: frozen plan
+    dataclasses, jax-free host-plane modules, no mutable defaults,
+    api.md coverage.
+
+Findings aggregate in :class:`repro.analysis.Report`;
+``Report.raise_if_failed()`` turns any finding into an
+:class:`AnalysisError`.  See docs/analysis.md.
+"""
+
+from .lint import lint_repo, lint_source
+from .planaudit import (
+    audit_bundle,
+    audit_cache,
+    audit_hier_kind,
+    audit_kind,
+    audit_phase,
+    audit_plan,
+    audit_statics,
+    statics_for_kind,
+)
+from .report import AnalysisError, Finding, Report
+
+__all__ = [
+    "AnalysisError",
+    "Finding",
+    "Report",
+    "audit_bundle",
+    "audit_cache",
+    "audit_hier_kind",
+    "audit_kind",
+    "audit_phase",
+    "audit_plan",
+    "audit_statics",
+    "statics_for_kind",
+    "lint_repo",
+    "lint_source",
+    "audit_kernel",
+    "audit_kernels",
+    "replay_kernel",
+]
+
+_KERNEL_EXPORTS = ("audit_kernel", "audit_kernels", "replay_kernel",
+                   "audit_kernel_trace", "schedule_scalars")
+
+
+def __getattr__(name):
+    # kernelaudit needs jax; keep the package importable (and the plan /
+    # lint passes runnable) on a NumPy-only host plane.
+    if name in _KERNEL_EXPORTS:
+        from . import kernelaudit
+
+        return getattr(kernelaudit, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

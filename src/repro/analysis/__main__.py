@@ -1,0 +1,147 @@
+"""CLI: ``python -m repro.analysis [--all|--plans|--kernels|--lint|--cache]``.
+
+Runs the static passes over a representative grid -- every plan kind,
+flat p across the interesting regimes (powers of two, primes, the
+composite sizes the paper benchmarks) with non-trivial roots, the
+two-level meshes up to the paper's 36x32 evaluation topology, host
+plans on both round-step backends, every registered Pallas kernel --
+and exits non-zero on any finding.  ``--bench PATH`` additionally
+records per-pass wall time to a JSON file (the repo's
+BENCH_analysis.json).
+
+Nothing here executes a collective: plans are audited from their frozen
+tables, kernels from traced jaxprs and index-map replay, sources from
+their ASTs.  The flat/hier table sweeps run on the host plane for ANY p
+-- no devices needed for 36x32.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from .lint import lint_repo
+from .planaudit import (
+    audit_bundle,
+    audit_cache,
+    audit_hier_kind,
+    audit_kind,
+    audit_plan,
+    HIER_PLAN_KINDS,
+    PLAN_KINDS,
+)
+from .report import Report
+
+# Flat p-grid: powers of two, primes, +-1 neighbours, the paper's 36.
+P_GRID = (2, 3, 4, 5, 7, 8, 11, 16, 17, 31, 32, 36, 63, 64)
+N_GRID = (1, 4, 8)
+#: Two-level meshes; (36, 32) is the paper's evaluation topology.
+HIER_MESHES = ((2, 2), (2, 4), (6, 4), (36, 32))
+#: Host-plan sweep (plan objects incl. executable round steps).
+HOST_PS = (2, 3, 5, 8)
+HOST_KINDS = ("broadcast", "allgather", "reduce", "quantized_allreduce")
+
+
+def run_plans() -> Report:
+    report = Report()
+    verified: set = set()
+    for kind in PLAN_KINDS:
+        for p in P_GRID:
+            for root in (0, p - 1):
+                for n in N_GRID:
+                    report = report + audit_kind(kind, p, n, root,
+                                                 _verified=verified)
+    for kind in HIER_PLAN_KINDS:
+        for nodes, cores in HIER_MESHES:
+            report = report + audit_hier_kind(kind, nodes, cores,
+                                              n_inter=4, n_intra=4,
+                                              _verified=verified)
+    # Host plans: real plan objects on both round-step backends (pallas
+    # in interpret mode off-TPU), audited through their statics.
+    from repro.core.comm import host_plan
+    from repro.core.engine import get_bundle
+    from repro.core.hier import hier_host_plan
+    from repro.core.roundstep import BACKENDS
+
+    for backend in BACKENDS:
+        for kind in HOST_KINDS:
+            for p in HOST_PS:
+                plan = host_plan(kind, p, n=4, backend=backend)
+                report = report + audit_plan(plan)
+        for kind in HIER_PLAN_KINDS:
+            plan = hier_host_plan(kind, 2, 4, 2, 4, backend=backend)
+            report = report + audit_plan(plan)
+    for p in P_GRID:
+        report = report + audit_bundle(get_bundle(p, 0))
+    return report
+
+
+def run_kernels() -> Report:
+    from .kernelaudit import audit_kernels
+
+    return audit_kernels(ps=(2, 3, 5, 8), ns=(1, 4))
+
+
+def run_lint() -> Report:
+    return lint_repo()
+
+
+def run_cache() -> Report:
+    # After the other passes populated it, sweep the engine plan cache
+    # for any thawed array (run last for maximal coverage).
+    return audit_cache()
+
+
+PASSES = (("plans", run_plans), ("kernels", run_kernels),
+          ("lint", run_lint), ("cache", run_cache))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static plan auditor, Pallas race detector, repo lint.")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when no pass is named)")
+    for name, _fn in PASSES:
+        ap.add_argument(f"--{name}", action="store_true",
+                        help=f"run the {name} pass")
+    ap.add_argument("--bench", metavar="PATH", default=None,
+                    help="write per-pass wall-time JSON to PATH")
+    args = ap.parse_args(argv)
+
+    selected = [name for name, _fn in PASSES if getattr(args, name)]
+    if args.all or not selected:
+        selected = [name for name, _fn in PASSES]
+
+    total = Report()
+    bench = {}
+    for name, fn in PASSES:
+        if name not in selected:
+            continue
+        t0 = time.perf_counter()
+        rep = fn()
+        dt = time.perf_counter() - t0
+        bench[name] = {"seconds": round(dt, 4), "checked": rep.checked,
+                       "findings": len(rep.findings)}
+        print(f"[{name}] {rep.summary()} in {dt:.2f}s")
+        total = total + rep
+    if args.bench:
+        payload = {"passes": bench,
+                   "total": {"checked": total.checked,
+                             "findings": len(total.findings),
+                             "seconds": round(sum(
+                                 b["seconds"] for b in bench.values()), 4)}}
+        Path(args.bench).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"bench written to {args.bench}")
+    if not total.ok:
+        print(f"FAILED: {len(total.findings)} finding(s)", file=sys.stderr)
+        return 1
+    print(f"OK: {total.checked} item(s) audited, 0 findings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+"""Repo lint: AST-level conventions the schedule stack relies on.
+
+Four rules, each a proven property of the source tree (no imports of the
+linted code -- pure :mod:`ast`, so a syntax-error-free tree is the only
+prerequisite):
+
+  * **frozen-plan** -- every dataclass whose name marks it as cached
+    static state (``*Plan``, ``*Spec``, ``*Bundle``, ``*Static``,
+    ``*Audit``) must be declared ``frozen=True``: plan objects are
+    shared process-wide by the engine cache and a mutable one breaks the
+    identity contract;
+  * **host-plane-jax** -- the host-plane modules (the schedule math that
+    must stay importable and runnable with NumPy alone) must not import
+    jax at module top level; function-local lazy imports are the
+    sanctioned escape hatch;
+  * **mutable-default** -- no function parameter defaults to a mutable
+    literal (``[]``, ``{}``, ``set()`` ...): defaults are evaluated once
+    and shared across calls, a classic aliasing bug;
+  * **api-doc** -- every symbol in ``repro.core.__all__`` appears in
+    ``docs/api.md`` (the executable docs assert this at test time; the
+    lint proves it statically so ``python -m repro.analysis`` catches a
+    missing doc without running pytest).
+
+Host-plane module: stdlib only.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .report import Finding, Report
+
+__all__ = [
+    "lint_source",
+    "lint_file",
+    "lint_api_docs",
+    "lint_repo",
+    "HOST_PLANE",
+    "FROZEN_NAME",
+]
+
+#: Class-name pattern for "cached static state" dataclasses.
+FROZEN_NAME = re.compile(r".*(Plan|Spec|Bundle|Static|Audit)$")
+
+#: Modules (repo-relative) that must stay importable without jax.
+HOST_PLANE = (
+    "src/repro/core/schedule.py",
+    "src/repro/core/engine.py",
+    "src/repro/core/verify.py",
+    "src/repro/core/costmodel.py",
+    "src/repro/core/roundstep.py",
+    "src/repro/core/reference.py",
+    "src/repro/analysis/__init__.py",
+    "src/repro/analysis/__main__.py",
+    "src/repro/analysis/report.py",
+    "src/repro/analysis/planaudit.py",
+    "src/repro/analysis/lint.py",
+)
+
+_JAX_ROOTS = ("jax", "jaxlib")
+
+
+def _find(out: List[Finding], check: str, location: str, message: str) -> None:
+    out.append(Finding(pass_name="lint", check=check, location=location,
+                       message=message))
+
+
+def _dataclass_frozen(deco: ast.expr) -> Optional[bool]:
+    """frozen= value if ``deco`` is a dataclass decorator, else None."""
+    target = deco.func if isinstance(deco, ast.Call) else deco
+    name = None
+    if isinstance(target, ast.Name):
+        name = target.id
+    elif isinstance(target, ast.Attribute):
+        name = target.attr
+    if name != "dataclass":
+        return None
+    if isinstance(deco, ast.Call):
+        for kw in deco.keywords:
+            if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                return bool(kw.value.value)
+    return False
+
+
+def _is_mutable_default(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in ("list", "dict", "set", "bytearray")
+            and not node.args and not node.keywords):
+        return True
+    return False
+
+
+def lint_source(source: str, path: str = "<string>",
+                host_plane: bool = False,
+                out: Optional[List[Finding]] = None) -> List[Finding]:
+    """Lint one module's source text (the unit the negative tests feed
+    corrupted strings to)."""
+    out = [] if out is None else out
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        _find(out, "syntax", f"{path}:{e.lineno}", str(e))
+        return out
+
+    for node in ast.walk(tree):
+        # frozen-plan
+        if isinstance(node, ast.ClassDef) and FROZEN_NAME.match(node.name):
+            verdicts = [v for v in map(_dataclass_frozen, node.decorator_list)
+                        if v is not None]
+            if verdicts and not any(verdicts):
+                _find(out, "frozen-plan", f"{path}:{node.lineno}",
+                      f"dataclass {node.name!r} is cached static state "
+                      f"and must be @dataclass(frozen=True)")
+        # mutable-default
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defaults = (list(node.args.defaults)
+                        + [d for d in node.args.kw_defaults if d is not None])
+            for d in defaults:
+                if _is_mutable_default(d):
+                    _find(out, "mutable-default", f"{path}:{d.lineno}",
+                          f"function {node.name!r} has a mutable default "
+                          f"argument (evaluated once, shared across calls)")
+        # host-plane-jax (module top level only: body of Module, plus
+        # top-level try/if blocks -- anything outside a function)
+    if host_plane:
+        for node in _toplevel_statements(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name.split(".")[0] in _JAX_ROOTS:
+                        _find(out, "host-plane-jax",
+                              f"{path}:{node.lineno}",
+                              f"top-level 'import {alias.name}' in a "
+                              f"host-plane module (lazy-import inside "
+                              f"the function that needs it)")
+            elif isinstance(node, ast.ImportFrom):
+                root = (node.module or "").split(".")[0]
+                if node.level == 0 and root in _JAX_ROOTS:
+                    _find(out, "host-plane-jax", f"{path}:{node.lineno}",
+                          f"top-level 'from {node.module} import ...' in "
+                          f"a host-plane module (lazy-import inside the "
+                          f"function that needs it)")
+    return out
+
+
+def _toplevel_statements(tree: ast.Module):
+    """Module-level statements, descending into top-level If/Try blocks
+    (the TYPE_CHECKING / optional-dep patterns) but not into defs."""
+    stack = list(tree.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.If, ast.Try, ast.With)):
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                for child in getattr(node, field, []):
+                    stack.append(child.body[0] if isinstance(
+                        child, ast.ExceptHandler) and child.body else child)
+
+
+def lint_file(path: Path, root: Path,
+              out: Optional[List[Finding]] = None) -> List[Finding]:
+    out = [] if out is None else out
+    rel = path.relative_to(root).as_posix()
+    lint_source(path.read_text(), rel, host_plane=rel in HOST_PLANE, out=out)
+    return out
+
+
+def lint_api_docs(root: Path,
+                  out: Optional[List[Finding]] = None) -> List[Finding]:
+    """Statically prove every ``repro.core.__all__`` symbol is mentioned
+    in docs/api.md."""
+    out = [] if out is None else out
+    init = root / "src/repro/core/__init__.py"
+    api = root / "docs/api.md"
+    if not api.exists():
+        _find(out, "api-doc", "docs/api.md", "missing API reference page")
+        return out
+    tree = ast.parse(init.read_text(), filename=str(init))
+    symbols: Sequence[str] = ()
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id == "__all__"):
+            symbols = [ast.literal_eval(e) for e in node.value.elts]
+    if not symbols:
+        _find(out, "api-doc", "src/repro/core/__init__.py",
+              "could not statically read __all__")
+        return out
+    doc = api.read_text()
+    for sym in symbols:
+        if not re.search(rf"\b{re.escape(sym)}\b", doc):
+            _find(out, "api-doc", "docs/api.md",
+                  f"public symbol repro.core.{sym} is undocumented")
+    return out
+
+
+def lint_repo(root: Optional[Path] = None) -> Report:
+    """Lint every Python module under src/repro plus the API-doc rule."""
+    root = Path(__file__).resolve().parents[3] if root is None else Path(root)
+    findings: List[Finding] = []
+    files = sorted((root / "src/repro").rglob("*.py"))
+    for path in files:
+        lint_file(path, root, findings)
+    lint_api_docs(root, findings)
+    return Report(findings=tuple(findings), checked=len(files) + 1)

@@ -1,0 +1,521 @@
+"""Static plan auditor: prove per-round safety from the tables alone.
+
+Every plan flavour (device :class:`~repro.core.comm.CollectivePlan` /
+:class:`~repro.core.hier.HierPlan`, host
+:class:`~repro.core.comm.HostDataPlan` /
+:class:`~repro.core.hier.HierHostPlan`) exposes ``statics``: the exact
+clamped slot tables and per-round rotations its executor closed over
+(:class:`~repro.core.roundstep.PhaseStatic`).  This pass discharges the
+data-plane invariants on those tables without running a single round:
+
+  * **round count** equals the closed forms, re-derived independently
+    (``n-1+ceil(log2 p)`` per phase, doubled for the composed
+    all-reductions, summed per level hierarchically);
+  * **rotation consistency**: the skip-column sequence matches the
+    forward (or reversed) round plan and every wire rotation is the
+    bundle skip of its column (negated mod p for reversed phases);
+  * **clamped-slot consistency**: the stored tables are entry-for-entry
+    the clamp of the bundle's per-round tables (and immutable, the
+    ``writeable=False`` cache contract);
+  * **write-once** (no write-write races): a rank's real receive slots
+    ``< n-1`` are pairwise distinct across rounds -- every data slot is
+    written by exactly one round (slot ``n-1`` may recur: final-phase
+    capped re-sends rewrite identical content; slot ``n`` is garbage);
+  * **no read-after-write aliasing**: a non-root rank never *sends* a
+    slot it has not received in a strictly earlier round (the send
+    stream reads only already-written destination slots, Condition 4 in
+    clamped form);
+  * **exchange consistency** (Conditions 1-2 in clamped form): what
+    round t reads on the wire at the sender is exactly what its
+    receiver writes -- ``send[t][r] == recv[t][(r+skip)%p]`` forward,
+    ``fwd[t][r] == acc[t][(r-skip)%p]`` reversed (root column pinned to
+    the identity slot and excluded);
+  * **reduction liveness**: the root's forward column is pinned to the
+    op identity slot, and on non-roots every accumulated real partial
+    is forwarded in a strictly later round (nothing stalls);
+  * the **schedule-level** forward + reversed correctness conditions of
+    :mod:`repro.core.verify` on the underlying bundle (once per
+    ``(p, root)``).
+
+Host-plane module: NumPy only, no jax imports (the audited plans are
+built elsewhere and passed in; :func:`audit_kind` builds *tables* for
+any p through the same process-wide caches, so auditing the paper's
+36x32 topology needs no device mesh).
+"""
+
+from __future__ import annotations
+
+from dataclasses import fields, is_dataclass
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import engine as _engine
+from repro.core.engine import get_bundle
+from repro.core.roundstep import (
+    PhaseStatic,
+    allgather_phase_static,
+    broadcast_phase_static,
+    reduce_phase_static,
+    scatter_phase_static,
+)
+from repro.core.verify import verify_bundle
+
+from .report import Finding, Report
+
+__all__ = [
+    "audit_phase",
+    "audit_statics",
+    "audit_plan",
+    "audit_kind",
+    "audit_hier_kind",
+    "audit_bundle",
+    "audit_cache",
+    "statics_for_kind",
+    "PLAN_KINDS",
+    "HIER_PLAN_KINDS",
+]
+
+#: Flat plan kinds the auditor can synthesize statics for (the full
+#: collective family of repro.core.comm.KINDS, canonicalized).
+PLAN_KINDS = ("broadcast", "allgather", "allgatherv", "reduce_scatter",
+              "reduce", "allreduce", "quantized_allreduce")
+
+HIER_PLAN_KINDS = ("broadcast", "reduce", "allreduce", "allgather")
+
+
+def _find(out: List[Finding], check: str, location: str, message: str,
+          pass_name: str = "plan") -> None:
+    out.append(Finding(pass_name=pass_name, check=check, location=location,
+                       message=message))
+
+
+def _q(p: int) -> int:
+    """ceil(log2 p) re-derived independently of repro.core.schedule."""
+    return (int(p) - 1).bit_length()
+
+
+def _phase_rounds(p: int, n: int) -> int:
+    """Closed-form per-phase round count, re-derived independently."""
+    return 0 if p <= 1 else n - 1 + _q(p)
+
+
+def statics_for_kind(kind: str, p: int, n: int,
+                     root: int = 0) -> Tuple[PhaseStatic, ...]:
+    """Synthesize the per-phase statics of a flat collective kind from
+    the process-wide caches -- the same builders every plan uses, so
+    auditing these audits the tables any plan of that spec would run."""
+    if kind not in PLAN_KINDS:
+        raise ValueError(f"unknown plan kind {kind!r} "
+                         f"(use one of {PLAN_KINDS})")
+    if p <= 1:
+        return ()
+    bundle = get_bundle(p, root)
+    if kind == "broadcast":
+        return (broadcast_phase_static(bundle, n),)
+    if kind in ("allgather", "allgatherv"):
+        return (allgather_phase_static(bundle, n),)
+    if kind == "reduce_scatter":
+        return (scatter_phase_static(bundle, n),)
+    if kind == "reduce":
+        return (reduce_phase_static(bundle, n),)
+    return (reduce_phase_static(bundle, n),
+            broadcast_phase_static(bundle, n))
+
+
+def _expected_phases(kind: str) -> Tuple[str, ...]:
+    """Phase-kind sequence a flat plan of ``kind`` must carry."""
+    return {
+        "broadcast": ("broadcast",),
+        "allgather": ("allgather",),
+        "allgatherv": ("allgather",),
+        "allbroadcast": ("allgather",),
+        "reduce_scatter": ("scatter",),
+        "reduce": ("reduce",),
+        "allreduce": ("reduce", "broadcast"),
+        "quantized_allreduce": ("reduce", "broadcast"),
+    }[kind]
+
+
+# ----------------------------------------------------------- phase audit
+
+
+def audit_phase(ps: PhaseStatic, out: Optional[List[Finding]] = None,
+                _verified: Optional[set] = None) -> List[Finding]:
+    """Audit one phase's static tables; returns the findings list."""
+    out = [] if out is None else out
+    loc = (f"{ps.kind} p={ps.p} root={ps.root} n={ps.n}"
+           + (f" axis={ps.axis}" if ps.axis else ""))
+    p, n, root = ps.p, ps.n, ps.root
+    q = _q(p)
+    R = _phase_rounds(p, n)
+    garbage = n
+
+    # -- structural sanity ------------------------------------------------
+    if ps.direction not in ("fwd", "rev"):
+        _find(out, "phase-direction", loc,
+              f"unknown direction {ps.direction!r}")
+        return out
+    expect_nslots = n + 2 if ps.kind == "reduce" else n + 1
+    if ps.nslots != expect_nslots:
+        _find(out, "slot-layout", loc,
+              f"nslots={ps.nslots}, expected {expect_nslots}")
+    nslots = expect_nslots  # range-check against the true layout
+
+    # -- round count vs the closed form ----------------------------------
+    if len(ps.ks) != R or len(ps.shifts) != R:
+        _find(out, "round-count", loc,
+              f"{len(ps.ks)} rounds in tables, closed form "
+              f"n-1+ceil(log2 p) gives {R}")
+    for tab in ps.slots:
+        if tab.shape != (len(ps.ks), p):
+            _find(out, "table-shape", loc,
+                  f"slot table shape {tab.shape} != ({len(ps.ks)}, {p})")
+            return out  # nothing below is meaningful on malformed tables
+
+    # -- immutability (the cache contract) -------------------------------
+    for name, arr in list(zip(("slots[0]", "slots[1]"), ps.slots)) + [
+            ("ks", np.asarray(ps.ks))]:
+        if isinstance(arr, np.ndarray) and arr.flags.writeable:
+            _find(out, "mutable-table", loc,
+                  f"{name} is writeable; cached plan tables must be "
+                  f"frozen (writeable=False)")
+
+    # -- rotation consistency against the bundle -------------------------
+    bundle = get_bundle(p, root)
+    plan = bundle.round_plan(n)
+    expected_ks = [k for k, _ in plan]
+    if ps.direction == "rev":
+        expected_ks = expected_ks[::-1]
+    if list(int(k) for k in ps.ks) != expected_ks:
+        _find(out, "ks-sequence", loc,
+              f"skip-column sequence {list(map(int, ps.ks))} != "
+              f"{ps.direction} round plan {expected_ks}")
+    else:
+        for t, k in enumerate(ps.ks):
+            sk = int(bundle.skip[int(k)])
+            want = sk if ps.direction == "fwd" else (p - sk) % p
+            if ps.shifts[t] != want:
+                _find(out, "rotation", loc,
+                      f"round {t}: wire rotation {ps.shifts[t]} != "
+                      f"{want} (skip[{int(k)}]={sk}, {ps.direction})")
+
+    # -- clamped-slot consistency against the bundle ---------------------
+    rebuilt = {
+        "broadcast": broadcast_phase_static,
+        "allgather": allgather_phase_static,
+        "reduce": reduce_phase_static,
+        "scatter": scatter_phase_static,
+    }.get(ps.kind)
+    if rebuilt is None:
+        _find(out, "phase-kind", loc, f"unknown phase kind {ps.kind!r}")
+        return out
+    ref = rebuilt(bundle, n)
+    if len(ref.slots) != len(ps.slots):
+        _find(out, "table-arity", loc,
+              f"{len(ps.slots)} slot tables, expected {len(ref.slots)}")
+        return out
+    for i, (got, want) in enumerate(zip(ps.slots, ref.slots)):
+        if got.shape == want.shape and not np.array_equal(got, want):
+            bad = int(np.argwhere(got != want)[0][0])
+            _find(out, "bundle-consistency", loc,
+                  f"slots[{i}] diverges from the bundle-derived clamp "
+                  f"(first bad round {bad})")
+
+    # -- slot range -------------------------------------------------------
+    for i, tab in enumerate(ps.slots):
+        if tab.size and (tab.min() < 0 or tab.max() >= nslots):
+            _find(out, "slot-range", loc,
+                  f"slots[{i}] addresses [{int(tab.min())}, "
+                  f"{int(tab.max())}] outside the {nslots}-slot buffer")
+            return out  # indexing below would be out of bounds
+
+    ranks = np.arange(p)
+    if ps.kind in ("broadcast", "allgather"):
+        recv = ps.slots[0]
+        # -- write-once: no two rounds write one rank's same data slot --
+        for r in range(p):
+            col = recv[:, r]
+            real = col[col < n - 1]
+            if len(real) != len(set(real.tolist())):
+                vals, counts = np.unique(real, return_counts=True)
+                dup = int(vals[counts > 1][0])
+                _find(out, "write-once", loc,
+                      f"rank {r} receives data slot {dup} in more than "
+                      f"one round (write-write race)")
+        if ps.kind == "broadcast":
+            send = ps.slots[1]
+            # -- exchange consistency (clamped Conditions 1-2) ----------
+            for t in range(len(ps.ks)):
+                sk = int(bundle.skip[int(ps.ks[t])])
+                if not np.array_equal(send[t], recv[t][(ranks + sk) % p]):
+                    _find(out, "exchange", loc,
+                          f"round {t}: send slots are not the receivers' "
+                          f"recv slots (Condition 2 violated)")
+            # -- RAW order: only already-received slots are ever sent ---
+            for r in range(p):
+                if r == root:
+                    continue
+                seen: set = set()
+                for t in range(len(ps.ks)):
+                    s = int(send[t, r])
+                    if s != garbage and s not in seen:
+                        _find(out, "raw-send", loc,
+                              f"rank {r} sends slot {s} in round {t} "
+                              f"before ever receiving it")
+                        break
+                    seen.add(int(recv[t, r]))
+    elif ps.kind in ("reduce", "scatter"):
+        fwd, acc = ps.slots
+        ident = n + 1
+        if ps.kind == "reduce":
+            # -- root pin: the root only ever ships the op identity -----
+            if not np.all(fwd[:, root] == ident):
+                _find(out, "root-pin", loc,
+                      f"root fwd column not pinned to the identity slot "
+                      f"{ident} (a live partial would leak the root)")
+        # -- exchange consistency (reversed Conditions 1-2, clamped) ----
+        for t in range(len(ps.ks)):
+            sk = int(bundle.skip[int(ps.ks[t])])
+            got = fwd[t]
+            want = acc[t][(ranks - sk) % p]
+            if ps.kind == "reduce":
+                got = np.delete(got, root)
+                want = np.delete(want, root)
+            if not np.array_equal(got, want):
+                _find(out, "exchange", loc,
+                      f"round {t}: forwarded slots are not the receivers' "
+                      f"acc slots (reversed Condition 2 violated)")
+        if ps.kind == "reduce":
+            # -- liveness: every accumulated real partial is forwarded --
+            for r in range(p):
+                if r == root:
+                    continue
+                future = [set() for _ in range(len(ps.ks) + 1)]
+                for t in range(len(ps.ks) - 1, -1, -1):
+                    future[t] = future[t + 1] | {int(fwd[t, r])}
+                for t in range(len(ps.ks)):
+                    s = int(acc[t, r])
+                    if s < n and s not in future[t + 1]:
+                        _find(out, "lost-partial", loc,
+                              f"rank {r} accumulates slot {s} in round "
+                              f"{t} but never forwards it (partial lost)")
+
+    # -- schedule-level conditions (once per (p, root)) -------------------
+    key = (p, root)
+    if _verified is None or key not in _verified:
+        try:
+            verify_bundle(bundle)
+        except AssertionError as e:
+            _find(out, "schedule-conditions", loc, str(e))
+        if _verified is not None:
+            _verified.add(key)
+    return out
+
+
+def audit_statics(statics: Iterable[PhaseStatic],
+                  _verified: Optional[set] = None) -> Report:
+    """Audit a plan's ``statics`` tuple phase by phase."""
+    findings: List[Finding] = []
+    checked = 0
+    verified = set() if _verified is None else _verified
+    for ps in statics:
+        audit_phase(ps, findings, verified)
+        checked += 1
+    return Report(findings=tuple(findings), checked=checked)
+
+
+# ------------------------------------------------------------ plan audit
+
+
+def _audit_phase_layout(statics, expect, loc, findings) -> None:
+    """Check a plan's phase sequence matches (kind, p, root, n) tuples."""
+    got = tuple((s.kind, s.p, s.root, s.n) for s in statics)
+    if got != tuple(expect):
+        _find(findings, "phase-layout", loc,
+              f"phase sequence {got} != expected {tuple(expect)}")
+
+
+def audit_plan(plan: Any) -> Report:
+    """Audit any plan object exposing ``statics`` (device or host, flat
+    or hierarchical -- dispatched by duck typing)."""
+    statics = getattr(plan, "statics", None)
+    if statics is None:
+        return Report(findings=(Finding(
+            "plan", "no-statics", repr(plan),
+            "plan exposes no statics tuple to audit"),), checked=1)
+    findings: List[Finding] = []
+    verified: set = set()
+
+    if hasattr(plan, "rounds_inter"):            # HierPlan
+        loc = (f"hier-{plan.kind} mesh={plan.nodes}x{plan.cores} "
+               f"root={plan.root} n=({plan.n_inter},{plan.n_intra})")
+        scale = 2 if plan.kind == "allreduce" else 1
+        rN = _phase_rounds(plan.nodes, plan.n_inter)
+        rC = _phase_rounds(plan.cores, plan.n_intra)
+        if plan.rounds_inter != scale * rN or plan.rounds_intra != scale * rC:
+            _find(findings, "round-count", loc,
+                  f"per-level rounds ({plan.rounds_inter}, "
+                  f"{plan.rounds_intra}) != closed forms "
+                  f"({scale * rN}, {scale * rC})")
+        if plan.rounds != plan.rounds_inter + plan.rounds_intra:
+            _find(findings, "round-count", loc,
+                  f"total rounds {plan.rounds} != inter+intra "
+                  f"{plan.rounds_inter + plan.rounds_intra}")
+        if plan.nodes * plan.cores > 1:
+            _audit_phase_layout(
+                statics,
+                _expected_hier_phases(plan.kind, plan.nodes, plan.cores,
+                                      plan.n_inter, plan.n_intra, plan.root),
+                loc, findings)
+    elif hasattr(plan, "n_blocks"):              # CollectivePlan
+        loc = (f"{plan.kind} p={plan.p} root={plan.root} "
+               f"n={plan.n_blocks} backend={plan.backend}")
+        scale = 2 if plan.kind in ("allreduce", "quantized_allreduce") else 1
+        want = scale * _phase_rounds(plan.p, plan.n_blocks)
+        if plan.rounds != want:
+            _find(findings, "round-count", loc,
+                  f"plan.rounds={plan.rounds} != closed form {want}")
+        if plan.p > 1:
+            root = plan.root
+            _audit_phase_layout(
+                statics,
+                [(k, plan.p, root, plan.n_blocks)
+                 for k in _expected_phases(plan.kind)],
+                loc, findings)
+    elif hasattr(plan, "ks"):                    # HostDataPlan
+        loc = (f"host-{plan.kind} p={plan.p} root={plan.root} n={plan.n} "
+               f"backend={plan.backend}")
+        if getattr(plan.step, "backend", plan.backend) != plan.backend:
+            _find(findings, "step-backend", loc,
+                  f"round-step handle backend "
+                  f"{getattr(plan.step, 'backend', None)!r} != plan "
+                  f"backend {plan.backend!r}")
+        if plan.p > 1:
+            _audit_phase_layout(
+                statics,
+                [(k, plan.p, plan.root, plan.n)
+                 for k in _expected_phases(plan.kind)],
+                loc, findings)
+            # identity: the audited arrays must BE the executed ones
+            executed = {id(a) for a in plan.slots}
+            for s in statics:
+                for arr in s.slots:
+                    if id(arr) not in executed:
+                        _find(findings, "table-identity", loc,
+                              "statics carry different array objects "
+                              "than the plan executes (cache identity "
+                              "broken)")
+    elif hasattr(plan, "cores"):                 # HierHostPlan
+        loc = (f"hier-host-{plan.kind} mesh={plan.nodes}x{plan.cores} "
+               f"root={plan.root} n=({plan.n_inter},{plan.n_intra})")
+        if plan.nodes * plan.cores > 1:
+            _audit_phase_layout(
+                statics,
+                _expected_hier_phases(plan.kind, plan.nodes, plan.cores,
+                                      plan.n_inter, plan.n_intra, plan.root),
+                loc, findings)
+
+    sub = audit_statics(statics, verified)
+    return Report(findings=tuple(findings), checked=1) + sub
+
+
+def _expected_hier_phases(kind, nodes, cores, nN, nC, root):
+    """(kind, p, root, n) sequence a two-level plan must carry, derived
+    independently of repro.core.hier."""
+    rootN, rootC = divmod(int(root), int(cores))
+    inter_b = [("broadcast", nodes, rootN, nN)] if nodes > 1 else []
+    intra_b = [("broadcast", cores, rootC, nC)] if cores > 1 else []
+    inter_r = [("reduce", nodes, rootN, nN)] if nodes > 1 else []
+    intra_r = [("reduce", cores, rootC, nC)] if cores > 1 else []
+    inter_g = [("allgather", nodes, rootN, nN)] if nodes > 1 else []
+    intra_g = [("allgather", cores, rootC, nC)] if cores > 1 else []
+    return {
+        "broadcast": inter_b + intra_b,
+        "reduce": intra_r + inter_r,
+        "allreduce": intra_r + inter_r + inter_b + intra_b,
+        "allgather": intra_g + inter_g,
+        "allbroadcast": intra_g + inter_g,
+    }[kind]
+
+
+# ----------------------------------------------------- kind-level sweeps
+
+
+def audit_kind(kind: str, p: int, n: int, root: int = 0,
+               _verified: Optional[set] = None) -> Report:
+    """Audit the tables a flat plan of this spec would run (no mesh, no
+    jax: works for any p, including sizes far beyond the local host)."""
+    return audit_statics(statics_for_kind(kind, p, n, root),
+                         _verified=_verified)
+
+
+def audit_hier_kind(kind: str, nodes: int, cores: int, n_inter: int,
+                    n_intra: int, root: int = 0,
+                    _verified: Optional[set] = None) -> Report:
+    """Audit the per-level tables of a two-level plan spec (the paper's
+    36x32 topology audits in-process this way)."""
+    if kind not in HIER_PLAN_KINDS:
+        raise ValueError(f"unknown hier plan kind {kind!r} "
+                         f"(use one of {HIER_PLAN_KINDS})")
+    statics: List[PhaseStatic] = []
+    for phase_kind, lp, lroot, ln in _expected_hier_phases(
+            kind, int(nodes), int(cores), int(n_inter), int(n_intra), root):
+        statics.extend(statics_for_kind(
+            {"allgather": "allgather", "broadcast": "broadcast",
+             "reduce": "reduce"}[phase_kind], lp, ln, lroot))
+    return audit_statics(statics, _verified=_verified)
+
+
+# --------------------------------------------------- immutability audits
+
+
+def audit_bundle(bundle) -> Report:
+    """``writeable=False`` audit of one cached schedule bundle."""
+    findings: List[Finding] = []
+    loc = f"bundle p={bundle.p} root={bundle.root}"
+    for name in ("recv", "send"):
+        arr = getattr(bundle, name)
+        if isinstance(arr, np.ndarray) and arr.flags.writeable:
+            _find(findings, "mutable-table", loc,
+                  f"bundle.{name} is writeable", pass_name="cache")
+    return Report(findings=tuple(findings), checked=1)
+
+
+def _walk_arrays(value: Any, seen: set):
+    """Yield every np.ndarray reachable from a plan-cache value through
+    dataclasses, dicts, tuples and lists (jax arrays, callables, Mesh
+    objects etc. are opaque leaves)."""
+    if id(value) in seen:
+        return
+    seen.add(id(value))
+    if isinstance(value, np.ndarray):
+        yield value
+    elif is_dataclass(value) and not isinstance(value, type):
+        for f in fields(value):
+            yield from _walk_arrays(getattr(value, f.name), seen)
+    elif isinstance(value, dict):
+        for v in value.values():
+            yield from _walk_arrays(v, seen)
+    elif isinstance(value, (tuple, list)):
+        for v in value:
+            yield from _walk_arrays(v, seen)
+
+
+def audit_cache(cache: Optional[Dict[Any, Any]] = None) -> Report:
+    """Immutability audit of every NumPy array reachable from the
+    engine's process-wide plan cache (slot plans, host plans, device
+    plans, quantized statics): all must carry ``writeable=False``."""
+    cache = _engine._plan_cache if cache is None else cache
+    findings: List[Finding] = []
+    seen: set = set()
+    checked = 0
+    for key, value in list(cache.items()):
+        checked += 1
+        for arr in _walk_arrays(value, seen):
+            if arr.flags.writeable:
+                _find(findings, "mutable-cache-entry", f"key={key!r}",
+                      f"cached array (shape {arr.shape}, dtype "
+                      f"{arr.dtype}) is writeable; plan-cache entries "
+                      f"must be frozen", pass_name="cache")
+    return Report(findings=tuple(findings), checked=checked)

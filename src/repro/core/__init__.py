@@ -32,7 +32,7 @@ from .hier import (
     hier_reduce,
     hier_rounds,
 )
-from .roundstep import RoundStep, get_round_step
+from .roundstep import PhaseStatic, RoundStep, get_round_step
 from .schedule import (
     baseblock,
     ceil_log2,
@@ -78,6 +78,7 @@ __all__ = [
     "hier_rounds",
     "ScheduleBundle",
     "get_bundle",
+    "PhaseStatic",
     "RoundStep",
     "get_round_step",
     "verify_bundle",

@@ -67,9 +67,14 @@ from .engine import ScheduleBundle, cached_plan, get_bundle
 from .jaxcompat import shard_map as _shard_map
 from .roundstep import (
     BACKENDS,
+    PhaseStatic,
+    allgather_phase_static,
+    broadcast_phase_static,
     broadcast_slot_plan,
     get_round_step,
+    reduce_phase_static,
     reduce_slot_plan,
+    scatter_phase_static,
     scatter_slot_plan,
 )
 
@@ -799,6 +804,10 @@ class CollectivePlan:
     backend: str
     axis_name: str
     qblock: Optional[int] = None
+    #: Auditable per-phase schedule statics (the exact cached slot
+    #: tables the executor closed over); () on the p == 1 fast path.
+    #: Checked by repro.analysis.planaudit without executing a round.
+    statics: Tuple[PhaseStatic, ...] = field(repr=False, default=())
     _execute: Optional[Callable] = field(repr=False, default=None)
 
     def __call__(self, payload: Any) -> Any:
@@ -818,6 +827,24 @@ class CollectivePlan:
         return (f"{self.kind} p={self.p} root={self.root} "
                 f"n={self.n_blocks} rounds={self.rounds} "
                 f"backend={self.backend}{extra} spec={self.spec.describe()}")
+
+
+def _plan_statics(kind: str, bundle: ScheduleBundle, n: int,
+                  axis: Optional[str] = None) -> Tuple[PhaseStatic, ...]:
+    """The per-phase audit records of a flat collective, in execution
+    order (the reversed reduction phase precedes the forward broadcast
+    phase for the composed all-reductions)."""
+    if kind == "broadcast":
+        return (broadcast_phase_static(bundle, n, axis=axis),)
+    if kind in ("allgather", "allgatherv"):
+        return (allgather_phase_static(bundle, n, axis=axis),)
+    if kind == "reduce_scatter":
+        return (scatter_phase_static(bundle, n, axis=axis),)
+    if kind == "reduce":
+        return (reduce_phase_static(bundle, n, axis=axis),)
+    # allreduce / quantized_allreduce: reversed reduce then broadcast
+    return (reduce_phase_static(bundle, n, axis=axis),
+            broadcast_phase_static(bundle, n, axis=axis))
 
 
 # --------------------------------------------------------- n-block choice
@@ -1115,7 +1142,8 @@ class CirculantComm:
         return CollectivePlan(
             kind=kind, spec=spec, p=p, root=root, op=op, n_blocks=n,
             rounds=rounds, backend=self.backend, axis_name=self.axis_name,
-            qblock=qblock, _execute=jax.jit(ex))
+            qblock=qblock, statics=_plan_statics(kind, bundle, n, axis),
+            _execute=jax.jit(ex))
 
     # ------------------------------------------------ collective shorthands
     #
@@ -1241,6 +1269,15 @@ class HostDataPlan:
     skips: Tuple[int, ...] = field(repr=False)
     step: Any = field(repr=False)
     qblock: Optional[int] = None
+
+    @property
+    def statics(self) -> Tuple[PhaseStatic, ...]:
+        """Auditable per-phase schedule statics (see
+        :mod:`repro.analysis`).  Built from the same process-cached slot
+        plans ``run`` executes, so the audited arrays ARE the executed
+        ones by identity."""
+        return _plan_statics(self.kind, get_bundle(self.p, self.root),
+                             self.n)
 
     def run(self, values: np.ndarray) -> np.ndarray:
         if self.kind == "broadcast":

@@ -63,8 +63,12 @@ from .engine import cached_plan, get_bundle
 from .jaxcompat import shard_map as _shard_map
 from .roundstep import (
     BACKENDS,
+    PhaseStatic,
+    allgather_phase_static,
+    broadcast_phase_static,
     broadcast_slot_plan,
     get_round_step,
+    reduce_phase_static,
     reduce_slot_plan,
 )
 from .schedule import num_rounds
@@ -275,6 +279,35 @@ def _lower_hier(mesh: Mesh, inter_axis: str, intra_axis: str, kind: str,
     return _tree_executor(shard_fn, spec.treedef)
 
 
+def _hier_statics(kind: str, bN, bC, nN: int, nC: int, inter_axis: str,
+                  intra_axis: str) -> Tuple[PhaseStatic, ...]:
+    """Per-phase audit records of a two-level collective, in the exact
+    execution order of :func:`_lower_hier` (one-rank levels compose
+    away).  Each record's tables come from the same process-cached slot
+    plans the lowering closed over."""
+    N, C = bN.p, bC.p
+    inter_b = ((broadcast_phase_static(bN, nN, axis=inter_axis),)
+               if N > 1 else ())
+    intra_b = ((broadcast_phase_static(bC, nC, axis=intra_axis),)
+               if C > 1 else ())
+    inter_r = ((reduce_phase_static(bN, nN, axis=inter_axis),)
+               if N > 1 else ())
+    intra_r = ((reduce_phase_static(bC, nC, axis=intra_axis),)
+               if C > 1 else ())
+    if kind == "broadcast":
+        return inter_b + intra_b
+    if kind == "reduce":
+        return intra_r + inter_r
+    if kind == "allreduce":
+        return intra_r + inter_r + inter_b + intra_b
+    # allgather: intra phase then inter exchange of the node blocks
+    inter_g = ((allgather_phase_static(bN, nN, axis=inter_axis),)
+               if N > 1 else ())
+    intra_g = ((allgather_phase_static(bC, nC, axis=intra_axis),)
+               if C > 1 else ())
+    return intra_g + inter_g
+
+
 # ------------------------------------------------------------ plan objects
 
 
@@ -304,6 +337,9 @@ class HierPlan:
     backend: str
     inter_axis: str
     intra_axis: str
+    #: Auditable per-phase schedule statics in execution order (see
+    #: repro.analysis.planaudit); () on the p == 1 fast path.
+    statics: Tuple[PhaseStatic, ...] = field(repr=False, default=())
     _execute: Optional[Callable] = field(repr=False, default=None)
 
     @property
@@ -481,7 +517,11 @@ class HierComm:
         bC = get_bundle(cores, rootC)
         ex = _lower_hier(self.mesh, self.inter_axis, self.intra_axis, kind,
                          bN, bC, nN, nC, rootN, rootC, op, self.backend, spec)
-        return HierPlan(_execute=jax.jit(ex), **common)
+        return HierPlan(_execute=jax.jit(ex),
+                        statics=_hier_statics(kind, bN, bC, nN, nC,
+                                              self.inter_axis,
+                                              self.intra_axis),
+                        **common)
 
     # ------------------------------------------------ collective shorthands
 
@@ -665,6 +705,15 @@ class HierHostPlan:
     def root_core(self) -> int:
         return self.root % self.cores
 
+    @property
+    def statics(self) -> Tuple[PhaseStatic, ...]:
+        """Composed per-phase audit records in run order, delegated to
+        the per-level flat host plans (a one-rank level contributes
+        nothing)."""
+        inter = self.inter.statics if self.inter is not None else ()
+        intra = self.intra.statics if self.intra is not None else ()
+        return inter + intra if self.kind == "broadcast" else intra + inter
+
     def run(self, values: np.ndarray) -> np.ndarray:
         if self.kind == "broadcast":
             return self._run_broadcast(values)
@@ -794,6 +843,16 @@ class _AllreduceHostPlan(HierHostPlan):
     """Hier allreduce host plan: per level, ``inter``/``intra`` hold a
     (reduce_plan, broadcast_plan) pair instead of one flat plan; the
     run is the reduction sweep followed by the broadcast sweep."""
+
+    @property
+    def statics(self) -> Tuple[PhaseStatic, ...]:
+        red_n, bc_n = self.inter if self.inter is not None else (None, None)
+        red_c, bc_c = self.intra if self.intra is not None else (None, None)
+        out: Tuple[PhaseStatic, ...] = ()
+        for plan in (red_c, red_n, bc_n, bc_c):  # the composed run order
+            if plan is not None:
+                out = out + plan.statics
+        return out
 
     def run(self, values: np.ndarray) -> np.ndarray:
         red_n, bc_n = self.inter if self.inter is not None else (None, None)

@@ -37,6 +37,7 @@ and by the backend-parametrized collective tests.
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import numpy as np
@@ -50,6 +51,11 @@ __all__ = [
     "broadcast_slot_plan",
     "reduce_slot_plan",
     "scatter_slot_plan",
+    "PhaseStatic",
+    "broadcast_phase_static",
+    "allgather_phase_static",
+    "reduce_phase_static",
+    "scatter_phase_static",
     "dataplane_broadcast",
     "dataplane_allgather",
     "dataplane_reduce",
@@ -136,6 +142,91 @@ def scatter_slot_plan(bundle, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarra
         return _frozen(clamp_slots(fwd_eff, n), clamp_slots(acc_eff, n), ks)
 
     return cached_plan(("slots/scatter", bundle.p, bundle.root, int(n)), build)
+
+
+# ------------------------------------------------------- phase statics
+#
+# A PhaseStatic is the auditable description of one schedule phase: the
+# exact clamped slot tables a plan's executor closed over (the cached
+# arrays themselves, by identity), the skip-column sequence and the
+# per-round wire rotations.  Plans of every flavour (device
+# CollectivePlan / HierPlan, host HostDataPlan / HierHostPlan) expose a
+# ``statics`` tuple of these, which repro.analysis.planaudit checks
+# against the bundle and the closed-form round counts without running a
+# single round.
+
+
+@dataclass(frozen=True, eq=False)
+class PhaseStatic:
+    """Static per-phase audit record (see :mod:`repro.analysis`).
+
+    ``kind`` is the phase family (``"broadcast"``, ``"allgather"``,
+    ``"reduce"``, ``"scatter"``); ``direction`` is ``"fwd"`` for
+    broadcast-direction phases and ``"rev"`` for reversed (reduction)
+    phases.  ``slots`` holds the clamped [R, p] tables in execution
+    order -- ``(recv, send)`` forward, ``(fwd, acc)`` reversed,
+    ``(recv,)`` for the allgather family -- and ``shifts[t]`` is the
+    signed-free rotation applied on the wire in round t (rank r sends to
+    ``(r + shifts[t]) % p``).  ``nslots`` is the buffer slot count the
+    tables address (n+1, or n+2 for the identity-pinned reduce layout).
+    """
+
+    kind: str
+    direction: str
+    p: int
+    root: int
+    n: int
+    nslots: int
+    slots: Tuple[np.ndarray, ...]
+    ks: np.ndarray
+    shifts: Tuple[int, ...]
+    axis: Optional[str] = None
+
+
+def broadcast_phase_static(bundle, n: int,
+                           axis: Optional[str] = None) -> PhaseStatic:
+    """Audit record of a forward broadcast phase (cached tables shared)."""
+    recv, send, ks = broadcast_slot_plan(bundle, n)
+    shifts = tuple(int(bundle.skip[int(k)]) for k in ks)
+    return PhaseStatic(kind="broadcast", direction="fwd", p=bundle.p,
+                       root=bundle.root, n=int(n), nslots=int(n) + 1,
+                       slots=(recv, send), ks=ks, shifts=shifts, axis=axis)
+
+
+def allgather_phase_static(bundle, n: int,
+                           axis: Optional[str] = None) -> PhaseStatic:
+    """Audit record of an all-to-all broadcast phase: only the receive
+    table is static per rank (send slots are derived per root row via
+    Condition 2's base rotation at run time)."""
+    recv, _send, ks = broadcast_slot_plan(bundle, n)
+    shifts = tuple(int(bundle.skip[int(k)]) for k in ks)
+    return PhaseStatic(kind="allgather", direction="fwd", p=bundle.p,
+                       root=bundle.root, n=int(n), nslots=int(n) + 1,
+                       slots=(recv,), ks=ks, shifts=shifts, axis=axis)
+
+
+def reduce_phase_static(bundle, n: int,
+                        axis: Optional[str] = None) -> PhaseStatic:
+    """Audit record of a reversed reduction phase (identity-pinned root
+    column, n+2-slot layout; partials travel against the skips)."""
+    fwd, acc, ks = reduce_slot_plan(bundle, n)
+    shifts = tuple((bundle.p - int(bundle.skip[int(k)])) % bundle.p
+                   for k in ks)
+    return PhaseStatic(kind="reduce", direction="rev", p=bundle.p,
+                       root=bundle.root, n=int(n), nslots=int(n) + 2,
+                       slots=(fwd, acc), ks=ks, shifts=shifts, axis=axis)
+
+
+def scatter_phase_static(bundle, n: int,
+                         axis: Optional[str] = None) -> PhaseStatic:
+    """Audit record of a reduce-scatter phase (unpinned reversed tables,
+    n+1-slot layout with drain-after-send routing)."""
+    fwd, acc, ks = scatter_slot_plan(bundle, n)
+    shifts = tuple((bundle.p - int(bundle.skip[int(k)])) % bundle.p
+                   for k in ks)
+    return PhaseStatic(kind="scatter", direction="rev", p=bundle.p,
+                       root=bundle.root, n=int(n), nslots=int(n) + 1,
+                       slots=(fwd, acc), ks=ks, shifts=shifts, axis=axis)
 
 
 # ------------------------------------------------------------- interface

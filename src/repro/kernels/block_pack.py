@@ -42,6 +42,8 @@ modes cannot diverge.
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +64,66 @@ def default_interpret() -> bool:
 
 def _resolve(interpret):
     return default_interpret() if interpret is None else interpret
+
+
+# ----------------------------------------------------------- index maps
+#
+# Every BlockSpec index map is a named module-level function so the
+# static race detector (repro.analysis.kernelaudit) can evaluate the
+# SAME map objects the pallas_call was built with over the whole grid.
+# 1-D kernels get (r, *prefetch_refs); the two-step accumulate/drain
+# kernels get (r, s, *prefetch_refs) with s the sequential sub-round.
+
+
+def _row_map1(r, idx_ref):
+    """[R, bs] row block of the 1-prefetch 1-D kernels (pack out)."""
+    return (r, 0)
+
+
+def _slot_map1(r, idx_ref):
+    """Prefetched-slot block of the 1-prefetch 1-D kernels."""
+    return (r, idx_ref[r], 0)
+
+
+def _row_map2(r, ri, si):
+    """[R, bs] row block of the 2-prefetch 1-D shuffle kernel."""
+    return (r, 0)
+
+
+def _send_map(r, ri, si):
+    """Read-only send-slot block of the shuffle kernel (pre-update)."""
+    return (r, si[r], 0)
+
+
+def _recv_map(r, ri, si):
+    """Recv-slot block of the shuffle kernel (aliased, overwritten)."""
+    return (r, ri[r], 0)
+
+
+def _row_map_rs(r, s, ai, fi):
+    """[R, bs] row block of the two-step accumulate/drain kernels."""
+    return (r, 0)
+
+
+def _fwd_map(r, s, ai, fi):
+    """Fwd-slot block of the accumulate/drain kernels (captured and, in
+    the qacc error path, read-modify-written)."""
+    return (r, fi[r], 0)
+
+
+def _step_map(r, s, ai, fi):
+    """Aliased buffer block of the accumulate/drain kernels: the acc
+    slot at s == 0, the fwd slot at s == 1 (the drain)."""
+    return (r, jnp.where(s == 0, ai[r], fi[r]), 0)
+
+
+# Pallas input_output_aliases, operand-indexed INCLUDING the scalar
+# prefetch arguments; module-level so the audit reads the exact dicts
+# the calls pass.
+UNPACK_ALIASES = {2: 0}      # buffers (3rd operand) -> output
+SHUFFLE_ALIASES = {4: 0}     # 2nd buffer operand -> new_buffers
+ACC_ALIASES = {4: 0}         # 2nd buffer operand -> new_buffers
+QACC_ALIASES = {5: 0, 6: 1}  # 2nd buffer operand -> new_buffers, err -> new_err
 
 
 # ------------------------------------------------------------------- pack
@@ -85,9 +147,9 @@ def block_pack(buffers: jnp.ndarray, idx: jnp.ndarray, *, interpret=None):
         num_scalar_prefetch=1,
         grid=(R,),
         in_specs=[
-            pl.BlockSpec((1, 1, bs), lambda r, idx_ref: (r, idx_ref[r], 0)),
+            pl.BlockSpec((1, 1, bs), _slot_map1),
         ],
-        out_specs=pl.BlockSpec((1, bs), lambda r, idx_ref: (r, 0)),
+        out_specs=pl.BlockSpec((1, bs), _row_map1),
     )
     return pl.pallas_call(
         _pack_kernel,
@@ -118,16 +180,16 @@ def block_unpack(buffers: jnp.ndarray, msg: jnp.ndarray, idx: jnp.ndarray,
         num_scalar_prefetch=1,
         grid=(R,),
         in_specs=[
-            pl.BlockSpec((1, bs), lambda r, idx_ref: (r, 0)),
-            pl.BlockSpec((1, 1, bs), lambda r, idx_ref: (r, idx_ref[r], 0)),
+            pl.BlockSpec((1, bs), _row_map1),
+            pl.BlockSpec((1, 1, bs), _slot_map1),
         ],
-        out_specs=pl.BlockSpec((1, 1, bs), lambda r, idx_ref: (r, idx_ref[r], 0)),
+        out_specs=pl.BlockSpec((1, 1, bs), _slot_map1),
     )
     return pl.pallas_call(
         _unpack_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
-        input_output_aliases={2: 0},   # buffers (3rd operand) -> output
+        input_output_aliases=UNPACK_ALIASES,
         interpret=_resolve(interpret),
     )(idx.astype(jnp.int32), msg, buffers)
 
@@ -165,15 +227,15 @@ def block_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
         num_scalar_prefetch=2,
         grid=(R,),
         in_specs=[
-            pl.BlockSpec((1, bs), lambda r, ri, si: (r, 0)),
+            pl.BlockSpec((1, bs), _row_map2),
             # read-only buffer view: the send block (pre-update content)
-            pl.BlockSpec((1, 1, bs), lambda r, ri, si: (r, si[r], 0)),
+            pl.BlockSpec((1, 1, bs), _send_map),
             # aliased buffer: the recv block (overwritten by the kernel)
-            pl.BlockSpec((1, 1, bs), lambda r, ri, si: (r, ri[r], 0)),
+            pl.BlockSpec((1, 1, bs), _recv_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, 1, bs), lambda r, ri, si: (r, ri[r], 0)),
-            pl.BlockSpec((1, bs), lambda r, ri, si: (r, 0)),
+            pl.BlockSpec((1, 1, bs), _recv_map),
+            pl.BlockSpec((1, bs), _row_map2),
         ],
     )
     return pl.pallas_call(
@@ -183,7 +245,7 @@ def block_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
             jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
             jax.ShapeDtypeStruct((R, bs), buffers.dtype),
         ],
-        input_output_aliases={4: 0},   # 2nd buffer operand -> new_buffers
+        input_output_aliases=SHUFFLE_ALIASES,
         interpret=_resolve(interpret),
     )(recv_idx.astype(jnp.int32), send_idx.astype(jnp.int32),
       msg, buffers, buffers)
@@ -237,21 +299,15 @@ def block_acc_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
         num_scalar_prefetch=2,
         grid=(R, 2),
         in_specs=[
-            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
+            pl.BlockSpec((1, bs), _row_map_rs),
             # read-only buffer view: the fwd block (pre-update content)
-            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
+            pl.BlockSpec((1, 1, bs), _fwd_map),
             # aliased buffer: acc block at s=0, fwd block at s=1
-            pl.BlockSpec(
-                (1, 1, bs),
-                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
-            ),
+            pl.BlockSpec((1, 1, bs), _step_map),
         ],
         out_specs=[
-            pl.BlockSpec(
-                (1, 1, bs),
-                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
-            ),
-            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
+            pl.BlockSpec((1, 1, bs), _step_map),
+            pl.BlockSpec((1, bs), _row_map_rs),
         ],
         scratch_shapes=[pltpu.VMEM((1, bs), buffers.dtype)],
     )
@@ -263,7 +319,7 @@ def block_acc_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
             jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
             jax.ShapeDtypeStruct((R, bs), buffers.dtype),
         ],
-        input_output_aliases={4: 0},   # 2nd buffer operand -> new_buffers
+        input_output_aliases=ACC_ALIASES,
         interpret=_resolve(interpret),
     )(acc_idx.astype(jnp.int32), fwd_idx.astype(jnp.int32),
       msg, buffers, buffers)
@@ -338,26 +394,20 @@ def block_qacc_shuffle(buffers: jnp.ndarray, err: jnp.ndarray,
         num_scalar_prefetch=2,
         grid=(R, 2),
         in_specs=[
-            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
-            pl.BlockSpec((1, nb), lambda r, s, ai, fi: (r, 0)),
+            pl.BlockSpec((1, bs), _row_map_rs),
+            pl.BlockSpec((1, nb), _row_map_rs),
             # read-only buffer view: the fwd block (pre-update content)
-            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
+            pl.BlockSpec((1, 1, bs), _fwd_map),
             # aliased buffer: acc block at s=0, fwd block at s=1
-            pl.BlockSpec(
-                (1, 1, bs),
-                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
-            ),
+            pl.BlockSpec((1, 1, bs), _step_map),
             # aliased err buffer: always the fwd block
-            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
+            pl.BlockSpec((1, 1, bs), _fwd_map),
         ],
         out_specs=[
-            pl.BlockSpec(
-                (1, 1, bs),
-                lambda r, s, ai, fi: (r, jnp.where(s == 0, ai[r], fi[r]), 0),
-            ),
-            pl.BlockSpec((1, 1, bs), lambda r, s, ai, fi: (r, fi[r], 0)),
-            pl.BlockSpec((1, bs), lambda r, s, ai, fi: (r, 0)),
-            pl.BlockSpec((1, nb), lambda r, s, ai, fi: (r, 0)),
+            pl.BlockSpec((1, 1, bs), _step_map),
+            pl.BlockSpec((1, 1, bs), _fwd_map),
+            pl.BlockSpec((1, bs), _row_map_rs),
+            pl.BlockSpec((1, nb), _row_map_rs),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, bs), jnp.int8),
@@ -377,7 +427,162 @@ def block_qacc_shuffle(buffers: jnp.ndarray, err: jnp.ndarray,
         ],
         # operands counted including the 2 prefetch scalars:
         # 5 = 2nd buffer operand -> new_buffers, 6 = err -> new_err
-        input_output_aliases={5: 0, 6: 1},
+        input_output_aliases=QACC_ALIASES,
         interpret=_resolve(interpret),
     )(acc_idx.astype(jnp.int32), fwd_idx.astype(jnp.int32),
       qmsg, smsg, buffers, buffers, err)
+
+
+# ------------------------------------------------------- audit registry
+#
+# Machine-checkable metadata for repro.analysis.kernelaudit: for every
+# kernel, the grid, the operand layout (the SAME index-map function
+# objects and alias dicts the pallas_call above was built with), which
+# logical storage each operand addresses, and at which grid points an
+# input block's value is actually consumed ("live").  The detector
+# replays the grid in Pallas' sequential lexicographic order and flags
+# (a) two grid points writing one block of one storage outside the
+# declared drain dimension, (b) a live input read of a block a strictly
+# earlier grid point wrote (the interpret==compiled divergence hazard),
+# and (c) alias pairs whose index maps disagree anywhere on the grid.
+
+
+@dataclass(frozen=True)
+class OperandAudit:
+    """One pallas operand as the race detector sees it.
+
+    ``storage`` names the logical HBM buffer the index map addresses --
+    operands passed the same array (the read-only + aliased buffer
+    trick) share a storage name, as does an output aliased onto an
+    input.  ``live`` is None for "consumed at every grid point" or a
+    predicate over the grid tuple; a fetched-but-discarded block (the
+    drain sub-round's alias read) is dead and cannot race.
+    """
+
+    name: str
+    storage: str
+    index_map: Callable
+    block: Tuple[int, ...]
+    live: Optional[Callable] = None
+
+
+@dataclass(frozen=True)
+class KernelAudit:
+    """Static audit description of one schedule-driven kernel."""
+
+    name: str
+    grid: Tuple[int, ...]
+    num_scalar_prefetch: int
+    scalar_names: Tuple[str, ...]
+    inputs: Tuple[OperandAudit, ...]
+    outputs: Tuple[OperandAudit, ...]
+    #: pallas input_output_aliases (operand-indexed incl. prefetch)
+    aliases: Tuple[Tuple[int, int], ...]
+    #: grid dims along which one block may be rewritten sequentially
+    #: (the two-step accumulate-then-drain sub-round); () elsewhere
+    drain_dims: Tuple[int, ...]
+    #: buffer dtype -> expected output dtypes (the no-silent-widening
+    #: contract of the sum/max/qacc paths)
+    out_dtypes: Callable
+
+
+KERNEL_NAMES = ("block_pack", "block_unpack", "block_shuffle",
+                "block_acc_shuffle", "block_qacc_shuffle")
+
+
+def _live_acc_step(g) -> bool:
+    """Accumulate/drain kernels consume their inputs only in the s == 0
+    sub-round; every s == 1 fetch is staged-through or discarded."""
+    return g[1] == 0
+
+
+def kernel_audit_spec(name: str, *, R: int, nslots: int, bs: int,
+                      nb: int = 1) -> KernelAudit:
+    """The :class:`KernelAudit` for kernel ``name`` at concrete sizes.
+
+    Single-sourced with the real calls: the returned records reference
+    the very index-map functions and alias dicts the ``pallas_call``\\ s
+    in this module pass, so auditing them audits the shipped kernels.
+    """
+    f32, i8 = jnp.float32, jnp.int8
+    if name == "block_pack":
+        return KernelAudit(
+            name=name, grid=(R,), num_scalar_prefetch=1,
+            scalar_names=("idx",),
+            inputs=(OperandAudit("buffers", "buf", _slot_map1, (1, 1, bs)),),
+            outputs=(OperandAudit("out", "msg", _row_map1, (1, bs)),),
+            aliases=(), drain_dims=(),
+            out_dtypes=lambda dt: (dt,))
+    if name == "block_unpack":
+        return KernelAudit(
+            name=name, grid=(R,), num_scalar_prefetch=1,
+            scalar_names=("idx",),
+            inputs=(
+                OperandAudit("msg", "msg", _row_map1, (1, bs)),
+                # aliased with the output; its fetched block is never
+                # consumed (the kernel dels the ref)
+                OperandAudit("buffers", "buf", _slot_map1, (1, 1, bs),
+                             live=lambda g: False),
+            ),
+            outputs=(OperandAudit("out", "buf", _slot_map1, (1, 1, bs)),),
+            aliases=tuple(sorted(UNPACK_ALIASES.items())), drain_dims=(),
+            out_dtypes=lambda dt: (dt,))
+    if name == "block_shuffle":
+        return KernelAudit(
+            name=name, grid=(R,), num_scalar_prefetch=2,
+            scalar_names=("recv_idx", "send_idx"),
+            inputs=(
+                OperandAudit("msg", "msg", _row_map2, (1, bs)),
+                OperandAudit("ro", "buf", _send_map, (1, 1, bs)),
+                OperandAudit("alias", "buf", _recv_map, (1, 1, bs),
+                             live=lambda g: False),
+            ),
+            outputs=(
+                OperandAudit("outbuf", "buf", _recv_map, (1, 1, bs)),
+                OperandAudit("outmsg", "outmsg", _row_map2, (1, bs)),
+            ),
+            aliases=tuple(sorted(SHUFFLE_ALIASES.items())), drain_dims=(),
+            out_dtypes=lambda dt: (dt, dt))
+    if name == "block_acc_shuffle":
+        return KernelAudit(
+            name=name, grid=(R, 2), num_scalar_prefetch=2,
+            scalar_names=("acc_idx", "fwd_idx"),
+            inputs=(
+                OperandAudit("msg", "msg", _row_map_rs, (1, bs),
+                             live=_live_acc_step),
+                OperandAudit("ro", "buf", _fwd_map, (1, 1, bs),
+                             live=_live_acc_step),
+                OperandAudit("alias", "buf", _step_map, (1, 1, bs),
+                             live=_live_acc_step),
+            ),
+            outputs=(
+                OperandAudit("outbuf", "buf", _step_map, (1, 1, bs)),
+                OperandAudit("outmsg", "outmsg", _row_map_rs, (1, bs)),
+            ),
+            aliases=tuple(sorted(ACC_ALIASES.items())), drain_dims=(1,),
+            out_dtypes=lambda dt: (dt, dt))
+    if name == "block_qacc_shuffle":
+        return KernelAudit(
+            name=name, grid=(R, 2), num_scalar_prefetch=2,
+            scalar_names=("acc_idx", "fwd_idx"),
+            inputs=(
+                OperandAudit("qmsg", "qmsg", _row_map_rs, (1, bs),
+                             live=_live_acc_step),
+                OperandAudit("smsg", "smsg", _row_map_rs, (1, nb),
+                             live=_live_acc_step),
+                OperandAudit("ro", "buf", _fwd_map, (1, 1, bs),
+                             live=_live_acc_step),
+                OperandAudit("alias", "buf", _step_map, (1, 1, bs),
+                             live=_live_acc_step),
+                OperandAudit("erro", "err", _fwd_map, (1, 1, bs),
+                             live=_live_acc_step),
+            ),
+            outputs=(
+                OperandAudit("outbuf", "buf", _step_map, (1, 1, bs)),
+                OperandAudit("outerr", "err", _fwd_map, (1, 1, bs)),
+                OperandAudit("outq", "outq", _row_map_rs, (1, bs)),
+                OperandAudit("outs", "outs", _row_map_rs, (1, nb)),
+            ),
+            aliases=tuple(sorted(QACC_ALIASES.items())), drain_dims=(1,),
+            out_dtypes=lambda dt: (f32, f32, i8, f32))
+    raise ValueError(f"unknown kernel {name!r} (use one of {KERNEL_NAMES})")

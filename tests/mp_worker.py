@@ -556,6 +556,52 @@ def check_hier(nodes, cores, backend="jnp"):
     print(f"hier degenerate 1x{p} == flat backend={backend} ok")
 
 
+def check_analysis(p, nodes, backend="jnp"):
+    """Static plan audit of real *device* plans: build CollectivePlan /
+    HierPlan objects on a live mesh and run repro.analysis.planaudit on
+    their statics (the host-plane CLI covers host plans; this covers
+    the jitted flavour's closed-over tables)."""
+    from repro.analysis import audit_plan
+    from repro.core.comm import get_comm
+    from repro.core.hier import get_hier_comm
+
+    mesh = make_mesh(p)
+    comm = get_comm(mesh, "data", backend=backend)
+    rng = np.random.default_rng(41)
+    xs = {"w": sharded(mesh, jnp.asarray(
+        rng.normal(size=(p, 12)).astype(np.float32)))}
+    for kind in ("broadcast", "allgather", "reduce", "allreduce"):
+        rooted = kind in ("broadcast", "reduce")
+        plan = comm.plan(kind, xs, n_blocks=3,
+                         root=p - 1 if rooted else 0)
+        rep = audit_plan(plan)
+        assert rep.ok, f"device {kind} plan failed audit:\n{rep.summary()}"
+        assert rep.checked > 0, f"device {kind} audit was vacuous"
+        print(f"analysis device {kind} p={p} backend={backend} ok")
+    qplan = comm.plan("quantized_allreduce",
+                      {"g": sharded(mesh, jnp.asarray(
+                          rng.normal(size=(p, 512)).astype(np.float32)))},
+                      qblock=256)
+    rep = audit_plan(qplan)
+    assert rep.ok, f"device quantized plan failed audit:\n{rep.summary()}"
+    print(f"analysis device quantized_allreduce p={p} ok")
+
+    cores = p // nodes
+    hmesh = Mesh(np.array(jax.devices()[:p]).reshape(nodes, cores),
+                 ("node", "core"))
+    hc = get_hier_comm(hmesh, "node", "core", backend=backend)
+    spec2d = NamedSharding(hmesh, P(("node", "core")))
+    hxs = {"w": jax.device_put(jnp.asarray(
+        rng.normal(size=(p, 10)).astype(np.float32)), spec2d)}
+    for kind in ("broadcast", "reduce", "allreduce", "allgather"):
+        rooted = kind in ("broadcast", "reduce")
+        hplan = hc.plan(kind, hxs, n_inter=2, n_intra=2,
+                        root=p - 1 if rooted else 0)
+        rep = audit_plan(hplan)
+        assert rep.ok, f"device hier {kind} failed audit:\n{rep.summary()}"
+        print(f"analysis device hier {kind} {nodes}x{cores} ok")
+
+
 def check_ring(p, elems=16):
     mesh = make_mesh(p)
     data = np.arange(p * elems, dtype=np.float32)
@@ -570,6 +616,11 @@ def main(what, p, backend="jnp", nodes=2):
         # Graceful skip (e.g. a backend that ignores the host-device
         # forcing flag): the caller maps this to pytest.skip.
         print(f"SKIP only {len(jax.devices())} device(s) available, need {p}")
+        return
+    if what == "analysis":
+        assert p % nodes == 0, f"nodes={nodes} must divide p={p}"
+        check_analysis(p, nodes, backend=backend)
+        print("ALL OK")
         return
     if what == "hier":
         assert p % nodes == 0, f"nodes={nodes} must divide p={p}"
