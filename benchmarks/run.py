@@ -64,6 +64,12 @@ def main() -> None:
 
         gradsync_bench.main()
 
+    if which in ("overlap", "all"):
+        print("# === Overlapped executor: double-buffered vs sequential rounds ===")
+        from benchmarks import overlap_bench
+
+        overlap_bench.main()
+
     if which in ("roundstep", "all"):
         print("# === Round-step data plane: jnp vs pallas backends ===")
         from benchmarks import allreduce_bench, bcast_bench

@@ -31,6 +31,7 @@ from .planaudit import (
     audit_kind,
     audit_plan,
     HIER_PLAN_KINDS,
+    OVERLAP_KINDS,
     PLAN_KINDS,
 )
 from .report import Report
@@ -54,6 +55,12 @@ def run_plans() -> Report:
                 for n in N_GRID:
                     report = report + audit_kind(kind, p, n, root,
                                                  _verified=verified)
+                    if kind in OVERLAP_KINDS:
+                        # double-buffered statics: same tables, plus the
+                        # overlap-equivalence replay
+                        report = report + audit_kind(kind, p, n, root,
+                                                     overlap=True,
+                                                     _verified=verified)
     for kind in HIER_PLAN_KINDS:
         for nodes, cores in HIER_MESHES:
             report = report + audit_hier_kind(kind, nodes, cores,
@@ -71,6 +78,10 @@ def run_plans() -> Report:
             for p in HOST_PS:
                 plan = host_plan(kind, p, n=4, backend=backend)
                 report = report + audit_plan(plan)
+                if kind in OVERLAP_KINDS:
+                    plan = host_plan(kind, p, n=4, backend=backend,
+                                     overlap=True)
+                    report = report + audit_plan(plan)
         for kind in HIER_PLAN_KINDS:
             plan = hier_host_plan(kind, 2, 4, 2, 4, backend=backend)
             report = report + audit_plan(plan)

@@ -179,8 +179,12 @@ def _traced_pallas_params(name: str, R: int, nslots: int, bs: int, nb: int,
                                                  interpret=True)),
         "block_shuffle": (lambda: bp.block_shuffle(buf, msg, idx, idx,
                                                    interpret=True)),
+        "block_shuffle_staged": (lambda: bp.block_shuffle_staged(
+            buf, msg, msg, idx, idx, interpret=True)),
         "block_acc_shuffle": (lambda: bp.block_acc_shuffle(
             buf, msg, idx, idx, op="sum", interpret=True)),
+        "block_acc_shuffle_staged": (lambda: bp.block_acc_shuffle_staged(
+            buf, msg, msg, idx, idx, op="sum", interpret=True)),
         "block_qacc_shuffle": (lambda: bp.block_qacc_shuffle(
             jnp.zeros((R, nslots, bs), jnp.float32),
             jnp.zeros((R, nslots, bs), jnp.float32),
@@ -261,14 +265,15 @@ def schedule_scalars(name: str, p: int, n: int,
     from repro.core.roundstep import broadcast_slot_plan, reduce_slot_plan
 
     bundle = get_bundle(p, root)
-    if name in ("block_pack", "block_unpack", "block_shuffle"):
+    if name in ("block_pack", "block_unpack", "block_shuffle",
+                "block_shuffle_staged"):
         recv, send, _ks = broadcast_slot_plan(bundle, n)
         nslots = n + 1
         if name == "block_pack":
             rows = [(send[t],) for t in range(len(send))]
         elif name == "block_unpack":
             rows = [(recv[t],) for t in range(len(recv))]
-        else:  # shuffle: unpack round t, pack round t+1
+        else:  # (staged) shuffle: unpack round t, pack round t+1
             rows = [(recv[t], send[t + 1]) for t in range(len(recv) - 1)]
         return nslots, rows
     fwd, acc, _ks = reduce_slot_plan(bundle, n)

@@ -16,6 +16,11 @@ prerequisite):
   * **mutable-default** -- no function parameter defaults to a mutable
     literal (``[]``, ``{}``, ``set()`` ...): defaults are evaluated once
     and shared across calls, a classic aliasing bug;
+  * **kernel-interpret** -- public entry points in the kernel modules
+    (``src/repro/kernels``) with an ``interpret`` parameter must default
+    it to ``None`` (platform auto-detection via ``resolve_interpret``):
+    a hardcoded ``interpret=True`` silently runs the kernel in interpret
+    mode on real accelerators, a hardcoded ``False`` breaks CPU CI;
   * **api-doc** -- every symbol in ``repro.core.__all__`` appears in
     ``docs/api.md`` (the executable docs assert this at test time; the
     lint proves it statically so ``python -m repro.analysis`` catches a
@@ -39,6 +44,7 @@ __all__ = [
     "lint_api_docs",
     "lint_repo",
     "HOST_PLANE",
+    "KERNEL_PLANE",
     "FROZEN_NAME",
 ]
 
@@ -59,6 +65,10 @@ HOST_PLANE = (
     "src/repro/analysis/planaudit.py",
     "src/repro/analysis/lint.py",
 )
+
+#: Directory (repo-relative prefix) whose public entry points must not
+#: force interpret mode.
+KERNEL_PLANE = "src/repro/kernels/"
 
 _JAX_ROOTS = ("jax", "jaxlib")
 
@@ -96,8 +106,25 @@ def _is_mutable_default(node: ast.expr) -> bool:
     return False
 
 
+def _interpret_default(node: ast.FunctionDef) -> Optional[ast.expr]:
+    """The default expression of a parameter named ``interpret``, if the
+    function has one with a default (positional-or-keyword or kw-only)."""
+    args = node.args
+    pos = args.posonlyargs + args.args
+    # defaults align with the tail of the positional parameter list
+    for arg, default in zip(pos[len(pos) - len(args.defaults):],
+                            args.defaults):
+        if arg.arg == "interpret":
+            return default
+    for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+        if arg.arg == "interpret" and default is not None:
+            return default
+    return None
+
+
 def lint_source(source: str, path: str = "<string>",
                 host_plane: bool = False,
+                kernel_plane: bool = False,
                 out: Optional[List[Finding]] = None) -> List[Finding]:
     """Lint one module's source text (the unit the negative tests feed
     corrupted strings to)."""
@@ -126,6 +153,17 @@ def lint_source(source: str, path: str = "<string>",
                     _find(out, "mutable-default", f"{path}:{d.lineno}",
                           f"function {node.name!r} has a mutable default "
                           f"argument (evaluated once, shared across calls)")
+        # kernel-interpret (public kernel entry points only)
+        if (kernel_plane and isinstance(node, ast.FunctionDef)
+                and not node.name.startswith("_")):
+            d = _interpret_default(node)
+            if (d is not None and isinstance(d, ast.Constant)
+                    and d.value is not None):
+                _find(out, "kernel-interpret", f"{path}:{d.lineno}",
+                      f"public kernel entry point {node.name!r} defaults "
+                      f"interpret={d.value!r}; default it to None and "
+                      f"route through resolve_interpret so real "
+                      f"accelerators compile the kernel")
         # host-plane-jax (module top level only: body of Module, plus
         # top-level try/if blocks -- anything outside a function)
     if host_plane:
@@ -166,7 +204,8 @@ def lint_file(path: Path, root: Path,
               out: Optional[List[Finding]] = None) -> List[Finding]:
     out = [] if out is None else out
     rel = path.relative_to(root).as_posix()
-    lint_source(path.read_text(), rel, host_plane=rel in HOST_PLANE, out=out)
+    lint_source(path.read_text(), rel, host_plane=rel in HOST_PLANE,
+                kernel_plane=rel.startswith(KERNEL_PLANE), out=out)
     return out
 
 

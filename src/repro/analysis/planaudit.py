@@ -33,6 +33,12 @@ data-plane invariants on those tables without running a single round:
   * **reduction liveness**: the root's forward column is pinned to the
     op identity slot, and on non-roots every accumulated real partial
     is forwarded in a strictly later round (nothing stalls);
+  * **overlap equivalence** (double-buffered statics only): a symbolic
+    per-rank replay of the staged round loop -- next round's block
+    packed from the *pre*-update buffer, the in-flight delivery patched
+    by the staged step's bypass -- proves the overlapped executor emits
+    the same wire stream and final buffer as the sequential loop, round
+    for round, from the tables alone;
   * the **schedule-level** forward + reversed correctness conditions of
     :mod:`repro.core.verify` on the underlying bundle (once per
     ``(p, root)``).
@@ -74,6 +80,7 @@ __all__ = [
     "statics_for_kind",
     "PLAN_KINDS",
     "HIER_PLAN_KINDS",
+    "OVERLAP_KINDS",
 ]
 
 #: Flat plan kinds the auditor can synthesize statics for (the full
@@ -100,27 +107,38 @@ def _phase_rounds(p: int, n: int) -> int:
     return 0 if p <= 1 else n - 1 + _q(p)
 
 
-def statics_for_kind(kind: str, p: int, n: int,
-                     root: int = 0) -> Tuple[PhaseStatic, ...]:
+#: Kinds whose plans accept ``overlap=True`` (repro.core.comm rejects
+#: the variable-count and quantized-wire kinds at plan time).
+OVERLAP_KINDS = ("broadcast", "allgather", "reduce_scatter", "reduce",
+                 "allreduce")
+
+
+def statics_for_kind(kind: str, p: int, n: int, root: int = 0,
+                     overlap: bool = False) -> Tuple[PhaseStatic, ...]:
     """Synthesize the per-phase statics of a flat collective kind from
     the process-wide caches -- the same builders every plan uses, so
-    auditing these audits the tables any plan of that spec would run."""
+    auditing these audits the tables any plan of that spec would run.
+    ``overlap=True`` synthesizes the double-buffered executor's statics
+    (only for the kinds that support the overlapped mode)."""
     if kind not in PLAN_KINDS:
         raise ValueError(f"unknown plan kind {kind!r} "
                          f"(use one of {PLAN_KINDS})")
+    if overlap and kind not in OVERLAP_KINDS:
+        raise ValueError(f"overlap statics are not defined for kind "
+                         f"{kind!r} (use one of {OVERLAP_KINDS})")
     if p <= 1:
         return ()
     bundle = get_bundle(p, root)
     if kind == "broadcast":
-        return (broadcast_phase_static(bundle, n),)
+        return (broadcast_phase_static(bundle, n, overlap=overlap),)
     if kind in ("allgather", "allgatherv"):
-        return (allgather_phase_static(bundle, n),)
+        return (allgather_phase_static(bundle, n, overlap=overlap),)
     if kind == "reduce_scatter":
-        return (scatter_phase_static(bundle, n),)
+        return (scatter_phase_static(bundle, n, overlap=overlap),)
     if kind == "reduce":
-        return (reduce_phase_static(bundle, n),)
-    return (reduce_phase_static(bundle, n),
-            broadcast_phase_static(bundle, n))
+        return (reduce_phase_static(bundle, n, overlap=overlap),)
+    return (reduce_phase_static(bundle, n, overlap=overlap),
+            broadcast_phase_static(bundle, n, overlap=overlap))
 
 
 def _expected_phases(kind: str) -> Tuple[str, ...]:
@@ -137,6 +155,116 @@ def _expected_phases(kind: str) -> Tuple[str, ...]:
     }[kind]
 
 
+# ------------------------------------------------- overlap equivalence
+#
+# The double-buffered executor packs round t+1's block from the
+# PRE-update buffer while round t's exchange is in flight, then runs
+# the staged step whose bypass patches the one slot round t writes.
+# These replays prove, from the tables alone, that the staged loop
+# emits the same wire stream and final buffer as the sequential loop:
+# slots hold opaque symbols (multisets of symbols in the reversed
+# direction), and the round-t delivery is the same symbol in both
+# executors -- valid by induction on rounds, since matching wire
+# streams through round t imply matching deliveries at round t.
+
+_IDENT = ()  # the op identity: the empty multiset of partials
+
+
+def _overlap_fwd_replay(recv: np.ndarray, send: np.ndarray, n: int, r: int,
+                        out: List[Finding], loc: str) -> None:
+    """One rank's forward rounds, sequential vs staged (broadcast /
+    allgather layout: n+1 slots, slot n garbage)."""
+    R = recv.shape[0]
+    buf_seq: List[Any] = [("init", s) for s in range(n + 1)]
+    buf_stg = list(buf_seq)
+    for t in range(R):
+        m = ("wire", t)
+        rs = int(recv[t, r])
+        if t + 1 < R:
+            ss = int(send[t + 1, r])
+            pre = buf_stg[ss]                      # packed pre-update
+            buf_seq[rs] = m
+            got_seq = buf_seq[ss]                  # packed post-update
+            buf_stg[rs] = m
+            got_stg = m if rs == ss else pre       # staged bypass
+            if got_seq != got_stg:
+                _find(out, "overlap-equivalence", loc,
+                      f"rank {r} round {t}: pre-packed send slot {ss} is "
+                      f"stale and not patched by the staged bypass "
+                      f"(overlapped wire stream diverges)")
+                return
+        else:
+            buf_seq[rs] = m
+            buf_stg[rs] = m
+    if buf_seq != buf_stg:
+        _find(out, "overlap-equivalence", loc,
+              f"rank {r}: overlapped final buffer diverges from the "
+              f"sequential executor")
+
+
+def _overlap_rev_replay(fwd: np.ndarray, acc: np.ndarray, n: int,
+                        nslots: int, r: int, out: List[Finding],
+                        loc: str) -> None:
+    """One rank's reversed rounds, sequential vs staged (reduce /
+    scatter layout; slot values are multisets of accumulated partials,
+    drained slots hold the op identity = the empty multiset)."""
+    R = fwd.shape[0]
+    garbage = n
+    # State after the initial capture+drain of round 0's forward, which
+    # both executors run as the same plain acc_shuffle.
+    buf_seq: List[Any] = [(("init", s),) for s in range(nslots)]
+    if nslots > n + 1:
+        buf_seq[n + 1] = _IDENT                    # identity slot
+    buf_seq[int(fwd[0, r])] = _IDENT
+    buf_stg = list(buf_seq)
+    for t in range(R):
+        m = ("wire", t)
+        a_s = int(acc[t, r])
+        f_s = int(fwd[t + 1, r]) if t + 1 < R else garbage
+        # sequential: accumulate, then capture post-accumulate, drain
+        buf_seq[a_s] = tuple(sorted(buf_seq[a_s] + (m,)))
+        got_seq = buf_seq[f_s]
+        buf_seq[f_s] = _IDENT
+        # staged: capture pre-accumulate, bypass the coincident slot
+        pre = buf_stg[f_s]
+        combined = tuple(sorted(buf_stg[a_s] + (m,)))
+        buf_stg[a_s] = combined
+        got_stg = combined if a_s == f_s else pre
+        buf_stg[f_s] = _IDENT
+        if got_seq != got_stg:
+            _find(out, "overlap-equivalence", loc,
+                  f"rank {r} round {t}: pre-captured forward slot {f_s} "
+                  f"misses a partial accumulated in round {t} (staged "
+                  f"acc bypass missed; overlapped wire stream diverges)")
+            return
+    if buf_seq != buf_stg:
+        _find(out, "overlap-equivalence", loc,
+              f"rank {r}: overlapped final buffer diverges from the "
+              f"sequential executor")
+
+
+def _audit_overlap(ps: PhaseStatic, out: List[Finding], loc: str) -> None:
+    """Replay every rank's rounds symbolically, staged vs sequential."""
+    if ps.kind in ("broadcast", "allgather"):
+        recv = ps.slots[0]
+        if ps.kind == "broadcast":
+            send = ps.slots[1]
+        else:
+            # The allgather executor derives root row j's send slot from
+            # the recv table via Condition 2's base rotation; per virtual
+            # rank that is exactly the rotated recv column.
+            ranks = np.arange(ps.p)
+            send = np.stack([recv[t][(ranks + ps.shifts[t]) % ps.p]
+                             for t in range(recv.shape[0])])
+        for r in range(ps.p):
+            _overlap_fwd_replay(recv, send, ps.n, r, out, loc)
+    else:
+        fwd, acc = ps.slots
+        nslots = ps.n + 2 if ps.kind == "reduce" else ps.n + 1
+        for r in range(ps.p):
+            _overlap_rev_replay(fwd, acc, ps.n, nslots, r, out, loc)
+
+
 # ----------------------------------------------------------- phase audit
 
 
@@ -145,7 +273,8 @@ def audit_phase(ps: PhaseStatic, out: Optional[List[Finding]] = None,
     """Audit one phase's static tables; returns the findings list."""
     out = [] if out is None else out
     loc = (f"{ps.kind} p={ps.p} root={ps.root} n={ps.n}"
-           + (f" axis={ps.axis}" if ps.axis else ""))
+           + (f" axis={ps.axis}" if ps.axis else "")
+           + (" overlap" if ps.overlap else ""))
     p, n, root = ps.p, ps.n, ps.root
     q = _q(p)
     R = _phase_rounds(p, n)
@@ -301,6 +430,10 @@ def audit_phase(ps: PhaseStatic, out: Optional[List[Finding]] = None,
                               f"rank {r} accumulates slot {s} in round "
                               f"{t} but never forwards it (partial lost)")
 
+    # -- overlap equivalence (double-buffered statics only) ---------------
+    if ps.overlap:
+        _audit_overlap(ps, out, loc)
+
     # -- schedule-level conditions (once per (p, root)) -------------------
     key = (p, root)
     if _verified is None or key not in _verified:
@@ -346,6 +479,16 @@ def audit_plan(plan: Any) -> Report:
             "plan exposes no statics tuple to audit"),), checked=1)
     findings: List[Finding] = []
     verified: set = set()
+
+    plan_overlap = getattr(plan, "overlap", None)
+    if plan_overlap is not None:
+        for s in statics:
+            if s.overlap != plan_overlap:
+                _find(findings, "overlap-flag", repr(plan),
+                      f"plan overlap={plan_overlap} but a "
+                      f"{s.kind} phase static carries "
+                      f"overlap={s.overlap} (executor mode and audited "
+                      f"tables disagree)")
 
     if hasattr(plan, "rounds_inter"):            # HierPlan
         loc = (f"hier-{plan.kind} mesh={plan.nodes}x{plan.cores} "
@@ -443,10 +586,12 @@ def _expected_hier_phases(kind, nodes, cores, nN, nC, root):
 
 
 def audit_kind(kind: str, p: int, n: int, root: int = 0,
+               overlap: bool = False,
                _verified: Optional[set] = None) -> Report:
     """Audit the tables a flat plan of this spec would run (no mesh, no
-    jax: works for any p, including sizes far beyond the local host)."""
-    return audit_statics(statics_for_kind(kind, p, n, root),
+    jax: works for any p, including sizes far beyond the local host).
+    ``overlap=True`` audits the double-buffered executor's statics."""
+    return audit_statics(statics_for_kind(kind, p, n, root, overlap=overlap),
                          _verified=_verified)
 
 

@@ -250,9 +250,18 @@ def _acc_dtype(dt: np.dtype):
 # round loop serves both.
 
 
-def _bcast_phase(flats, n, recv_slots, send_slots, perms, axis_name, r, step):
+def _bcast_phase(flats, n, recv_slots, send_slots, perms, axis_name, r, step,
+                 overlap=False):
     """Forward broadcast rounds along ``axis_name``; the root row holds
-    the data, every row ends holding all n blocks."""
+    the data, every row ends holding all n blocks.
+
+    With ``overlap=True`` the round loop is double-buffered: round
+    t+1's send block is packed from the PRE-update buffer -- a value
+    with no data dependence on round t's ppermute result, so XLA can
+    schedule the pack while the exchange is in flight -- and the staged
+    step patches the single stale case ``recv[t] == send[t+1]`` with
+    the received message.  Bit-exact vs the sequential loop (only the
+    recv slot changes per round)."""
     recv_t = jnp.asarray(recv_slots)  # [R, p] static slot tables
     send_t = jnp.asarray(send_slots)
     R = recv_t.shape[0]
@@ -267,9 +276,15 @@ def _bcast_phase(flats, n, recv_slots, send_slots, perms, axis_name, r, step):
         got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
         for i in range(len(bufs)):
             if t + 1 < R:
-                bufs[i], msgs[i] = step.shuffle(
-                    bufs[i], got[i], recv_t[t, r][None],
-                    send_t[t + 1, r][None])
+                if overlap:
+                    pre = step.pack(bufs[i], send_t[t + 1, r][None])
+                    bufs[i], msgs[i] = step.shuffle_staged(
+                        bufs[i], got[i], pre, recv_t[t, r][None],
+                        send_t[t + 1, r][None])
+                else:
+                    bufs[i], msgs[i] = step.shuffle(
+                        bufs[i], got[i], recv_t[t, r][None],
+                        send_t[t + 1, r][None])
             else:
                 bufs[i] = step.unpack(bufs[i], got[i], recv_t[t, r][None])
     return [buf[0, :n].reshape(-1)[:size]
@@ -277,10 +292,15 @@ def _bcast_phase(flats, n, recv_slots, send_slots, perms, axis_name, r, step):
 
 
 def _reduce_phase(flats, n, fwd_slots, acc_slots, perms, axis_name, r,
-                  idents, op, step):
+                  idents, op, step, overlap=False):
     """Reversed (reduction) rounds along ``axis_name``; the root row
     ends with the op-reduction, every other row is drained to the
-    identity."""
+    identity.
+
+    With ``overlap=True`` the captured round-t+1 forward block is packed
+    from the PRE-accumulate buffer (overlapping the round-t exchange)
+    and the staged step patches the coincident ``fwd == acc`` case with
+    the freshly combined value -- bit-exact vs the sequential loop."""
     F = jnp.asarray(fwd_slots)  # [R, p] static slot tables (root row
     A = jnp.asarray(acc_slots)  # pinned to the identity slot n+1)
     R = F.shape[0]
@@ -304,14 +324,19 @@ def _reduce_phase(flats, n, fwd_slots, acc_slots, perms, axis_name, r,
             # accumulate round t's incoming partial, then capture+drain
             # round t+1's forward (each partial flows along exactly one
             # tree edge).
-            bufs[i], msgs[i] = step.acc_shuffle(
-                bufs[i], got[i], A[t, r][None], nxt, op=op)
+            if overlap:
+                pre = step.pack(bufs[i], nxt)
+                bufs[i], msgs[i] = step.acc_shuffle_staged(
+                    bufs[i], got[i], pre, A[t, r][None], nxt, op=op)
+            else:
+                bufs[i], msgs[i] = step.acc_shuffle(
+                    bufs[i], got[i], A[t, r][None], nxt, op=op)
     return [buf[0, :n].reshape(-1)[:size]
             for buf, size in zip(bufs, sizes)]
 
 
 def _allgather_phase(flats, n, recv_slots, skips, perms, axis_name, r,
-                     p, step):
+                     p, step, overlap=False):
     """All-to-all broadcast rounds along ``axis_name``: every row
     contributes its flat vector, every row ends with the [p * len]
     rank-major concatenation.  One clamped [R, p] slot table serves
@@ -338,8 +363,14 @@ def _allgather_phase(flats, n, recv_slots, skips, perms, axis_name, r,
         got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
         for i in range(len(bufs)):
             if t + 1 < R:
-                bufs[i], msgs[i] = step.shuffle(
-                    bufs[i], got[i], S[t][base], send_slots_at(t + 1))
+                if overlap:
+                    pre = step.pack(bufs[i], send_slots_at(t + 1))
+                    bufs[i], msgs[i] = step.shuffle_staged(
+                        bufs[i], got[i], pre, S[t][base],
+                        send_slots_at(t + 1))
+                else:
+                    bufs[i], msgs[i] = step.shuffle(
+                        bufs[i], got[i], S[t][base], send_slots_at(t + 1))
             else:
                 bufs[i] = step.unpack(bufs[i], got[i], S[t][base])
     return [buf[:, :n, :].reshape(p, -1)[:, :size].reshape(-1)
@@ -513,7 +544,7 @@ def _qsync_static(p: int, sizes: Tuple[int, ...], n_blocks: Optional[int],
 
 def _lower_broadcast(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
                      n: int, root: int, backend: str,
-                     spec: PayloadSpec) -> Callable:
+                     spec: PayloadSpec, overlap: bool = False) -> Callable:
     p = bundle.p
     recv_slots, send_slots, ks = broadcast_slot_plan(bundle, n)
     step = get_round_step(backend)
@@ -528,7 +559,7 @@ def _lower_broadcast(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
             flats.append(jnp.where(r == root, flat, jnp.zeros_like(flat)))
             shapes.append(xs.shape)
         outs = _bcast_phase(flats, n, recv_slots, send_slots, perms,
-                            axis_name, r, step)
+                            axis_name, r, step, overlap=overlap)
         return tuple(f.reshape(shape) for f, shape in zip(outs, shapes))
 
     shard_fn = _shard_map(
@@ -544,7 +575,8 @@ def _lower_broadcast(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
 
 
 def _lower_allgather(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
-                     n: int, backend: str, spec: PayloadSpec) -> Callable:
+                     n: int, backend: str, spec: PayloadSpec,
+                     overlap: bool = False) -> Callable:
     p = bundle.p
     recv_slots, _, ks = broadcast_slot_plan(bundle, n)
     step = get_round_step(backend)
@@ -557,7 +589,7 @@ def _lower_allgather(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
         flats = [xs.reshape(-1) for xs in shards]
         shapes = [xs.shape for xs in shards]
         outs = _allgather_phase(flats, n, recv_slots, skips, perms,
-                                axis_name, r, p, step)
+                                axis_name, r, p, step, overlap=overlap)
         return tuple(
             f.reshape((p * shape[0],) + tuple(shape[1:]))
             for f, shape in zip(outs, shapes)
@@ -643,7 +675,7 @@ def _lower_allgatherv(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
 
 def _lower_reduce(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
                   n: int, root: int, op: str, backend: str,
-                  spec: PayloadSpec) -> Callable:
+                  spec: PayloadSpec, overlap: bool = False) -> Callable:
     from repro.kernels.reduce_ops import op_identity
 
     p = bundle.p
@@ -658,7 +690,8 @@ def _lower_reduce(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
         flats = [xs.reshape(-1) for xs in shards]
         shapes = [xs.shape for xs in shards]
         outs = _reduce_phase(flats, n, fwd_slots, acc_slots, perms,
-                             axis_name, r, idents, op, step)
+                             axis_name, r, idents, op, step,
+                             overlap=overlap)
         return tuple(
             jnp.where(r == root, f, jnp.zeros_like(f)).reshape(shape)
             for f, shape in zip(outs, shapes)
@@ -676,8 +709,8 @@ def _lower_reduce(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
 
 
 def _lower_reduce_scatter(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
-                          n: int, backend: str,
-                          spec: PayloadSpec) -> Callable:
+                          n: int, backend: str, spec: PayloadSpec,
+                          overlap: bool = False) -> Callable:
     p = bundle.p
     fwd_slots, acc_slots, ks = scatter_slot_plan(bundle, n)
     step = get_round_step(backend)
@@ -715,8 +748,13 @@ def _lower_reduce_scatter(mesh: Mesh, axis_name: str, bundle: ScheduleBundle,
             got = [jax.lax.ppermute(m, axis_name, perms[t]) for m in msgs]
             nxt = F[t + 1][base] if t + 1 < R else garbage
             for i in range(L):
-                bufs[i], msgs[i] = step.acc_shuffle(
-                    bufs[i], got[i], A[t][base], nxt, op="sum")
+                if overlap:
+                    pre = step.pack(bufs[i], nxt)
+                    bufs[i], msgs[i] = step.acc_shuffle_staged(
+                        bufs[i], got[i], pre, A[t][base], nxt, op="sum")
+                else:
+                    bufs[i], msgs[i] = step.acc_shuffle(
+                        bufs[i], got[i], A[t][base], nxt, op="sum")
         outs = []
         for buf, (shard, bs, dt) in zip(bufs, meta):
             own = jax.lax.dynamic_slice(buf, (r, 0, 0), (1, n, bs))
@@ -804,6 +842,11 @@ class CollectivePlan:
     backend: str
     axis_name: str
     qblock: Optional[int] = None
+    #: True when the executor runs the overlapped (double-buffered)
+    #: round loop: the next round's block is packed from the pre-update
+    #: buffer concurrently with the in-flight exchange, then patched by
+    #: the staged step.  Bit-exact vs the sequential executor.
+    overlap: bool = False
     #: Auditable per-phase schedule statics (the exact cached slot
     #: tables the executor closed over); () on the p == 1 fast path.
     #: Checked by repro.analysis.planaudit without executing a round.
@@ -824,27 +867,32 @@ class CollectivePlan:
         extra = f" op={self.op}" if self.op else ""
         if self.qblock is not None:
             extra += f" qblock={self.qblock}"
+        if self.overlap:
+            extra += " overlap"
         return (f"{self.kind} p={self.p} root={self.root} "
                 f"n={self.n_blocks} rounds={self.rounds} "
                 f"backend={self.backend}{extra} spec={self.spec.describe()}")
 
 
 def _plan_statics(kind: str, bundle: ScheduleBundle, n: int,
-                  axis: Optional[str] = None) -> Tuple[PhaseStatic, ...]:
+                  axis: Optional[str] = None,
+                  overlap: bool = False) -> Tuple[PhaseStatic, ...]:
     """The per-phase audit records of a flat collective, in execution
     order (the reversed reduction phase precedes the forward broadcast
     phase for the composed all-reductions)."""
     if kind == "broadcast":
-        return (broadcast_phase_static(bundle, n, axis=axis),)
+        return (broadcast_phase_static(bundle, n, axis=axis,
+                                       overlap=overlap),)
     if kind in ("allgather", "allgatherv"):
-        return (allgather_phase_static(bundle, n, axis=axis),)
+        return (allgather_phase_static(bundle, n, axis=axis,
+                                       overlap=overlap),)
     if kind == "reduce_scatter":
-        return (scatter_phase_static(bundle, n, axis=axis),)
+        return (scatter_phase_static(bundle, n, axis=axis, overlap=overlap),)
     if kind == "reduce":
-        return (reduce_phase_static(bundle, n, axis=axis),)
+        return (reduce_phase_static(bundle, n, axis=axis, overlap=overlap),)
     # allreduce / quantized_allreduce: reversed reduce then broadcast
-    return (reduce_phase_static(bundle, n, axis=axis),
-            broadcast_phase_static(bundle, n, axis=axis))
+    return (reduce_phase_static(bundle, n, axis=axis, overlap=overlap),
+            broadcast_phase_static(bundle, n, axis=axis, overlap=overlap))
 
 
 # --------------------------------------------------------- n-block choice
@@ -995,7 +1043,8 @@ class CirculantComm:
 
     def plan(self, kind: str, spec: Any, *, n_blocks: Optional[int] = None,
              root: int = 0, op: str = "sum", sizes: Any = None,
-             qblock: Optional[int] = None) -> CollectivePlan:
+             qblock: Optional[int] = None,
+             overlap: bool = False) -> CollectivePlan:
         """Precompute a :class:`CollectivePlan` for ``kind`` and a payload
         spec (an example payload, a pytree of ``ShapeDtypeStruct``s, or a
         :class:`PayloadSpec`).  Cached process-wide: equal arguments
@@ -1005,11 +1054,24 @@ class CirculantComm:
         allreduce (f32 leaves only; ``qblock`` sets the quantization
         block, default :data:`repro.kernels.quant_ops.QBLOCK`); calling
         it returns a ``(sums, errors)`` pair of payload-shaped trees.
+
+        ``overlap=True`` plans the double-buffered executor: each
+        round's pack is computed from the pre-update buffer with no data
+        dependence on the in-flight exchange, so the round-to-round
+        critical path shrinks to exchange -> select -> exchange
+        (docs/overlap.md).  Bit-exact vs the sequential executor.
+        Supported for broadcast / allgather / allbroadcast / reduce /
+        allreduce / reduce_scatter; the irregular ``allgatherv`` and the
+        quantized wire (whose requantization is fused into the round
+        step) stay sequential.
         """
         if kind not in KINDS:
             raise ValueError(f"unknown collective kind {kind!r} "
                              f"(use one of {KINDS})")
         kind = _CANONICAL_KIND.get(kind, kind)
+        _require(not overlap or kind not in ("allgatherv",
+                                             "quantized_allreduce"),
+                 f"overlap= is not supported for kind {kind!r}")
         spec = payload_spec(spec)
         _require(spec.num_leaves > 0, "payload has no array leaves")
         # Arguments that don't apply to the kind are rejected (a silently
@@ -1049,9 +1111,10 @@ class CirculantComm:
         n = self._resolve_n(kind, spec, n_blocks, sizes_key, qblock_key)
         key = ("commplan", self.mesh, self.axis_name, self.backend,
                self.model, kind, spec, n, root_key, op_key, sizes_key,
-               qblock_key)
+               qblock_key, bool(overlap))
         return cached_plan(key, lambda: self._build(
-            kind, spec, n, root_key, op_key, sizes_key, qblock_key))
+            kind, spec, n, root_key, op_key, sizes_key, qblock_key,
+            overlap=bool(overlap)))
 
     def _resolve_n(self, kind: str, spec: PayloadSpec,
                    n_blocks: Optional[int], sizes_canon,
@@ -1086,7 +1149,8 @@ class CirculantComm:
 
     def _build(self, kind: str, spec: PayloadSpec, n: int,
                root: int, op: Optional[str], sizes_canon,
-               qblock: Optional[int] = None) -> CollectivePlan:
+               qblock: Optional[int] = None,
+               overlap: bool = False) -> CollectivePlan:
         p = self.p
         if op is not None:
             # Validate the op name host-side, before any tracing; the
@@ -1105,16 +1169,18 @@ class CirculantComm:
             return CollectivePlan(
                 kind=kind, spec=spec, p=p, root=0, op=op,
                 n_blocks=n, rounds=0, backend=self.backend,
-                axis_name=self.axis_name, qblock=qblock, _execute=ex)
+                axis_name=self.axis_name, qblock=qblock, overlap=overlap,
+                _execute=ex)
 
         bundle = get_bundle(p, root)
         mesh, axis = self.mesh, self.axis_name
         if kind == "broadcast":
             ex = _lower_broadcast(mesh, axis, bundle, n, root, self.backend,
-                                  spec)
+                                  spec, overlap=overlap)
             rounds = bundle.rounds(n)
         elif kind == "allgather":
-            ex = _lower_allgather(mesh, axis, bundle, n, self.backend, spec)
+            ex = _lower_allgather(mesh, axis, bundle, n, self.backend, spec,
+                                  overlap=overlap)
             rounds = bundle.rounds(n)
         elif kind == "allgatherv":
             ex = _lower_allgatherv(mesh, axis, bundle, n, self.backend, spec,
@@ -1122,11 +1188,11 @@ class CirculantComm:
             rounds = bundle.rounds(n)
         elif kind == "reduce_scatter":
             ex = _lower_reduce_scatter(mesh, axis, bundle, n, self.backend,
-                                       spec)
+                                       spec, overlap=overlap)
             rounds = bundle.rounds(n)
         elif kind == "reduce":
             ex = _lower_reduce(mesh, axis, bundle, n, root, op, self.backend,
-                               spec)
+                               spec, overlap=overlap)
             rounds = bundle.rounds(n)
         elif kind == "quantized_allreduce":
             ex = _lower_quantized_allreduce(mesh, axis, bundle, n, root,
@@ -1134,15 +1200,16 @@ class CirculantComm:
             rounds = bundle.allreduce_rounds(n)
         else:  # allreduce: reversed reduce then forward broadcast, one n
             red = _lower_reduce(mesh, axis, bundle, n, root, op, self.backend,
-                                spec)
+                                spec, overlap=overlap)
             bcast = _lower_broadcast(mesh, axis, bundle, n, root,
-                                     self.backend, spec)
+                                     self.backend, spec, overlap=overlap)
             ex = lambda payload: bcast(red(payload))  # noqa: E731
             rounds = bundle.allreduce_rounds(n)
         return CollectivePlan(
             kind=kind, spec=spec, p=p, root=root, op=op, n_blocks=n,
             rounds=rounds, backend=self.backend, axis_name=self.axis_name,
-            qblock=qblock, statics=_plan_statics(kind, bundle, n, axis),
+            qblock=qblock, overlap=overlap,
+            statics=_plan_statics(kind, bundle, n, axis, overlap=overlap),
             _execute=jax.jit(ex))
 
     # ------------------------------------------------ collective shorthands
@@ -1150,14 +1217,16 @@ class CirculantComm:
     # Thin plan-cache lookups: spec from the payload, cached plan, call.
 
     def broadcast(self, x: Any, *, n_blocks: Optional[int] = None,
-                  root: int = 0) -> Any:
+                  root: int = 0, overlap: bool = False) -> Any:
         """Root's slices reach every rank in ``n-1+ceil(log2 p)`` rounds."""
         return self.plan("broadcast", payload_spec(x), n_blocks=n_blocks,
-                         root=root)(x)
+                         root=root, overlap=overlap)(x)
 
-    def allgather(self, x: Any, *, n_blocks: Optional[int] = None) -> Any:
+    def allgather(self, x: Any, *, n_blocks: Optional[int] = None,
+                  overlap: bool = False) -> Any:
         """All-to-all broadcast of equal contributions; replicated out."""
-        return self.plan("allgather", payload_spec(x), n_blocks=n_blocks)(x)
+        return self.plan("allgather", payload_spec(x), n_blocks=n_blocks,
+                         overlap=overlap)(x)
 
     def allgatherv(self, x: Any, sizes: Any, *,
                    n_blocks: Optional[int] = None) -> Any:
@@ -1166,28 +1235,30 @@ class CirculantComm:
         return self.plan("allgatherv", payload_spec(x), n_blocks=n_blocks,
                          sizes=sizes)(x)
 
-    def reduce_scatter(self, x: Any, *,
-                       n_blocks: Optional[int] = None) -> Any:
+    def reduce_scatter(self, x: Any, *, n_blocks: Optional[int] = None,
+                       overlap: bool = False) -> Any:
         """Time-reversed all-to-all broadcast: summed shards, scattered."""
         return self.plan("reduce_scatter", payload_spec(x),
-                         n_blocks=n_blocks)(x)
+                         n_blocks=n_blocks, overlap=overlap)(x)
 
     def reduce(self, x: Any, *, n_blocks: Optional[int] = None, root: int = 0,
-               op: str = "sum") -> Any:
+               op: str = "sum", overlap: bool = False) -> Any:
         """Op-reduction to ``root`` on the reversed schedule."""
         return self.plan("reduce", payload_spec(x), n_blocks=n_blocks,
-                         root=root, op=op)(x)
+                         root=root, op=op, overlap=overlap)(x)
 
     def allreduce(self, x: Any, *, n_blocks: Optional[int] = None,
-                  root: int = 0, op: str = "sum") -> Any:
+                  root: int = 0, op: str = "sum",
+                  overlap: bool = False) -> Any:
         """Reduce + broadcast composition, ``2(n-1)+2*ceil(log2 p)``."""
         return self.plan("allreduce", payload_spec(x), n_blocks=n_blocks,
-                         root=root, op=op)(x)
+                         root=root, op=op, overlap=overlap)(x)
 
-    def allbroadcast(self, x: Any, *, n_blocks: Optional[int] = None) -> Any:
+    def allbroadcast(self, x: Any, *, n_blocks: Optional[int] = None,
+                     overlap: bool = False) -> Any:
         """Family name for the all-to-all broadcast (same plan)."""
         return self.plan("allbroadcast", payload_spec(x),
-                         n_blocks=n_blocks)(x)
+                         n_blocks=n_blocks, overlap=overlap)(x)
 
     def quantized_allreduce(self, x: Any, *,
                             n_blocks: Optional[int] = None, root: int = 0,
@@ -1269,6 +1340,7 @@ class HostDataPlan:
     skips: Tuple[int, ...] = field(repr=False)
     step: Any = field(repr=False)
     qblock: Optional[int] = None
+    overlap: bool = False
 
     @property
     def statics(self) -> Tuple[PhaseStatic, ...]:
@@ -1277,7 +1349,7 @@ class HostDataPlan:
         plans ``run`` executes, so the audited arrays ARE the executed
         ones by identity."""
         return _plan_statics(self.kind, get_bundle(self.p, self.root),
-                             self.n)
+                             self.n, overlap=self.overlap)
 
     def run(self, values: np.ndarray) -> np.ndarray:
         if self.kind == "broadcast":
@@ -1303,9 +1375,16 @@ class HostDataPlan:
             for t in range(R):
                 got = jnp.roll(msg, self.skips[t], axis=0)
                 if t + 1 < R:
-                    buf, msg = self.step.shuffle(
-                        buf, got, jnp.asarray(recv_slots[t]),
-                        jnp.asarray(send_slots[t + 1]))
+                    if self.overlap:
+                        pre = self.step.pack(
+                            buf, jnp.asarray(send_slots[t + 1]))
+                        buf, msg = self.step.shuffle_staged(
+                            buf, got, pre, jnp.asarray(recv_slots[t]),
+                            jnp.asarray(send_slots[t + 1]))
+                    else:
+                        buf, msg = self.step.shuffle(
+                            buf, got, jnp.asarray(recv_slots[t]),
+                            jnp.asarray(send_slots[t + 1]))
                 else:
                     buf = self.step.unpack(buf, got,
                                            jnp.asarray(recv_slots[t]))
@@ -1335,8 +1414,15 @@ class HostDataPlan:
                 got = jnp.roll(msg.reshape(p, p, bs), sk,
                                axis=0).reshape(p * p, bs)
                 if t + 1 < R:
-                    buf, msg = self.step.shuffle(
-                        buf, got, slots(t, 0), slots(t + 1, self.skips[t + 1]))
+                    if self.overlap:
+                        nxt = slots(t + 1, self.skips[t + 1])
+                        pre = self.step.pack(buf, nxt)
+                        buf, msg = self.step.shuffle_staged(
+                            buf, got, pre, slots(t, 0), nxt)
+                    else:
+                        buf, msg = self.step.shuffle(
+                            buf, got, slots(t, 0),
+                            slots(t + 1, self.skips[t + 1]))
                 else:
                     buf = self.step.unpack(buf, got, slots(t, 0))
             return np.asarray(buf).reshape(p, p, n + 1, bs)[:, :, :n]
@@ -1367,8 +1453,14 @@ class HostDataPlan:
                 got = jnp.roll(msg, -self.skips[t], axis=0)
                 nxt = (jnp.asarray(fwd_slots[t + 1]) if t + 1 < R
                        else garbage)
-                buf, msg = self.step.acc_shuffle(
-                    buf, got, jnp.asarray(acc_slots[t]), nxt, op=self.op)
+                if self.overlap:
+                    pre = self.step.pack(buf, nxt)
+                    buf, msg = self.step.acc_shuffle_staged(
+                        buf, got, pre, jnp.asarray(acc_slots[t]), nxt,
+                        op=self.op)
+                else:
+                    buf, msg = self.step.acc_shuffle(
+                        buf, got, jnp.asarray(acc_slots[t]), nxt, op=self.op)
             return np.asarray(buf)[:, :n]
 
     def _run_quantized(self, values: np.ndarray):
@@ -1449,19 +1541,25 @@ class HostDataPlan:
 
 def host_plan(kind: str, p: int, n: int, *, root: int = 0, op: str = "sum",
               backend: str = "jnp", interpret: Optional[bool] = None,
-              qblock: Optional[int] = None) -> HostDataPlan:
+              qblock: Optional[int] = None,
+              overlap: bool = False) -> HostDataPlan:
     """The cached :class:`HostDataPlan` for a certification execution.
 
     ``kind``: ``"broadcast"``, ``"allgather"``, ``"reduce"`` or
     ``"quantized_allreduce"`` (``qblock`` applies to the latter only).
-    Equal arguments return the identical plan object; ``run(values)``
-    then does no schedule or slot-table work.
+    ``overlap=True`` runs the double-buffered round loop (unsupported
+    for the quantized wire), bit-exact vs the sequential one.  Equal
+    arguments return the identical plan object; ``run(values)`` then
+    does no schedule or slot-table work.
     """
     if kind not in ("broadcast", "allgather", "reduce",
                     "quantized_allreduce"):
         raise ValueError(f"unknown host data-plane kind {kind!r}")
     if qblock is not None and kind != "quantized_allreduce":
         raise ValueError(f"qblock= does not apply to kind {kind!r}")
+    if overlap and kind == "quantized_allreduce":
+        raise ValueError("overlap= is not supported for kind "
+                         "'quantized_allreduce'")
     if kind == "quantized_allreduce":
         from repro.kernels.quant_ops import QBLOCK
 
@@ -1471,7 +1569,7 @@ def host_plan(kind: str, p: int, n: int, *, root: int = 0, op: str = "sum",
     if kind == "quantized_allreduce" and op != "sum":
         raise ValueError("quantized_allreduce always sums")
     key = ("hostplan", kind, int(p), int(n), root_key, op_key, backend,
-           interpret, qblock)
+           interpret, qblock, bool(overlap))
 
     def build():
         bundle = get_bundle(p, root_key)
@@ -1493,6 +1591,7 @@ def host_plan(kind: str, p: int, n: int, *, root: int = 0, op: str = "sum",
         return HostDataPlan(
             kind=kind, p=int(p), n=int(n), root=root_key, op=op_key,
             backend=backend, slots=slots, ks=ks, skips=skips,
-            step=get_round_step(backend, interpret), qblock=qblock)
+            step=get_round_step(backend, interpret), qblock=qblock,
+            overlap=bool(overlap))
 
     return cached_plan(key, build)

@@ -168,21 +168,39 @@ def allreduce_recursive_doubling_cost(p: int, m: float, model: CommModel) -> flo
     return ceil_log2(p) * model.msg(m)
 
 
+def _clamp_blocks(n: float, cap: float) -> int:
+    """Clamp an analytic block-count optimum to ``[1, floor(cap)]``.
+
+    ``cap`` is the payload unit count blocks must not outnumber (a block
+    beyond it is pure padding: it moves no payload but still costs a
+    round).  Total: any float ``n``/``cap`` -- including nonfinite or
+    huge optima from degenerate models -- satisfies
+    ``1 <= result <= max(1, cap)``.
+    """
+    if not (cap > 1):                        # <=1, zero, negative, NaN
+        return 1
+    hi = int(cap) if math.isfinite(cap) else (1 << 31)
+    if not math.isfinite(n):
+        return hi if n > 0 else 1
+    return max(1, min(int(round(n)), hi))
+
+
 def optimal_num_blocks_bcast(p: int, m: float, model: CommModel) -> int:
     """Analytic optimum of (n-1+q)(alpha + beta*m/n) over n.
 
     d/dn [ (n-1+q) (alpha + beta m / n) ] = 0 gives
     n* = sqrt((q-1) * beta * m / alpha); the paper's practical rule uses
     block size F*sqrt(m/q), i.e. n ~ sqrt(m*q)/F.  We return the analytic
-    optimum clamped to [1, m].
+    optimum clamped to [1, m] (never more blocks than payload units --
+    block n > m would be pad-only and waste a round).
     """
     if p == 1:
         return 1
     q = ceil_log2(p)
-    if m <= 1:
+    if not (m > 1):
         return 1
     n = math.sqrt(max(q - 1, 1) * model.beta * m / model.alpha)
-    return max(1, min(int(round(n)), int(m)))
+    return _clamp_blocks(n, m)
 
 
 def optimal_num_blocks_reduce(p: int, m: float, model: CommModel) -> int:
@@ -273,7 +291,9 @@ def optimal_hier_blocks(
     else:
         n_inter = optimal_num_blocks_bcast(p_inter, m_inter, inter_model)
         n_intra = optimal_num_blocks_bcast(p_intra, m_intra, intra_model)
-    return n_inter, n_intra
+    # Per-level clamp, restated here so the composed result upholds the
+    # n <= max(1, m) invariant even if a level optimizer is swapped out.
+    return (_clamp_blocks(n_inter, m_inter), _clamp_blocks(n_intra, m_intra))
 
 
 def optimal_num_blocks_allgather(p: int, m: float, model: CommModel) -> int:
@@ -282,7 +302,7 @@ def optimal_num_blocks_allgather(p: int, m: float, model: CommModel) -> int:
         return 1
     q = ceil_log2(p)
     mb = m * (p - 1) / p  # bytes moved per full sweep
-    if mb <= 1:
+    if not (mb > 1):
         return 1
     n = math.sqrt(max(q - 1, 1) * model.beta * mb / model.alpha)
-    return max(1, min(int(round(n)), max(1, int(m / p))))
+    return _clamp_blocks(n, m / p)  # blocks split the per-rank share

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import cached_property, lru_cache
-from typing import Any, Callable, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -60,6 +60,7 @@ __all__ = [
     "plan_cache_clear",
     "plan_cache_info",
     "plan_cache_keys",
+    "plan_cache_limit",
 ]
 
 
@@ -409,6 +410,10 @@ def bundle_cache_info():
 
 _plan_cache: Dict[Any, Any] = {}
 _plan_stats = {"hits": 0, "misses": 0}
+#: Optional LRU bound; None (the default) keeps the cache eviction-free.
+_plan_limit: Optional[int] = None
+
+_LIMIT_UNSET = object()
 
 
 def cached_plan(key: Any, build: Callable[[], Any]) -> Any:
@@ -417,16 +422,60 @@ def cached_plan(key: Any, build: Callable[[], Any]) -> Any:
     ``key`` must be hashable and fully determine ``build()``'s result
     (include p, root, n, kind, backend, payload spec, ... as needed).
     Identity is stable while cached: two lookups with equal keys return
-    the *same* object, so plans may be compared with ``is``.
+    the *same* object, so plans may be compared with ``is``.  With the
+    default unbounded cache "while cached" means the process lifetime;
+    under a :func:`plan_cache_limit` bound an entry may be evicted once
+    it falls out of the k most recently used.
     """
     try:
         val = _plan_cache[key]
         _plan_stats["hits"] += 1
+        if _plan_limit is not None:
+            # LRU bookkeeping: re-insert to mark most recently used
+            # (dicts preserve insertion order; unbounded mode skips this
+            # so the default path stays a single dict lookup).
+            del _plan_cache[key]
+            _plan_cache[key] = val
         return val
     except KeyError:
         pass
     _plan_stats["misses"] += 1
-    return _plan_cache.setdefault(key, build())
+    val = _plan_cache.setdefault(key, build())
+    if _plan_limit is not None:
+        while len(_plan_cache) > _plan_limit:
+            oldest = next(iter(_plan_cache))
+            del _plan_cache[oldest]
+    return val
+
+
+def plan_cache_limit(limit: Any = _LIMIT_UNSET) -> Optional[int]:
+    """Get or set the optional LRU bound on the plan cache.
+
+    Called with no argument, returns the current bound (``None`` =
+    unbounded, the default).  ``plan_cache_limit(k)`` bounds the cache
+    to the ``k`` most recently *used* entries, evicting the oldest
+    immediately and on every subsequent insertion;
+    ``plan_cache_limit(None)`` removes the bound (existing entries are
+    kept).  The default is unbounded on purpose: it preserves the
+    documented identity contract ("planning twice returns the same
+    object") for the life of the process.  Bound the cache only in
+    long-running loops whose payload specs churn (serving with varying
+    batch shapes), where unbounded growth is a host-memory leak --
+    plans evicted and re-planned are equal but not identical.
+    """
+    global _plan_limit
+    if limit is _LIMIT_UNSET:
+        return _plan_limit
+    if limit is not None:
+        limit = int(limit)
+        if limit < 1:
+            raise ValueError(f"plan_cache_limit must be >= 1 or None, "
+                             f"got {limit}")
+        while len(_plan_cache) > limit:
+            oldest = next(iter(_plan_cache))
+            del _plan_cache[oldest]
+    _plan_limit = limit
+    return _plan_limit
 
 
 def plan_cache_clear() -> None:
@@ -447,8 +496,9 @@ def plan_cache_keys() -> Tuple[Any, ...]:
     "hierplan", "hostplan", "hierhostplan", "slots/...", "comm",
     "hiercomm"), so mixed hierarchical and flat specs can never collide
     -- the cache-audit tests assert this invariant over the snapshot.
-    The cache is eviction-free by design (plans are small and the key
+    The cache is eviction-free by default (plans are small and the key
     space is bounded by distinct specs), so the snapshot is also how
-    tests certify that repeated planning does not grow it.
+    tests certify that repeated planning does not grow it; an explicit
+    :func:`plan_cache_limit` opts into LRU eviction.
     """
     return tuple(_plan_cache.keys())

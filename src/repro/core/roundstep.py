@@ -181,20 +181,26 @@ class PhaseStatic:
     ks: np.ndarray
     shifts: Tuple[int, ...]
     axis: Optional[str] = None
+    #: True when the executor runs the overlapped (double-buffered) round
+    #: loop: round t+1's block is packed from the pre-update buffer while
+    #: round t's exchange is in flight, then patched by the staged step.
+    #: The auditor additionally proves the staleness condition on these.
+    overlap: bool = False
 
 
-def broadcast_phase_static(bundle, n: int,
-                           axis: Optional[str] = None) -> PhaseStatic:
+def broadcast_phase_static(bundle, n: int, axis: Optional[str] = None,
+                           overlap: bool = False) -> PhaseStatic:
     """Audit record of a forward broadcast phase (cached tables shared)."""
     recv, send, ks = broadcast_slot_plan(bundle, n)
     shifts = tuple(int(bundle.skip[int(k)]) for k in ks)
     return PhaseStatic(kind="broadcast", direction="fwd", p=bundle.p,
                        root=bundle.root, n=int(n), nslots=int(n) + 1,
-                       slots=(recv, send), ks=ks, shifts=shifts, axis=axis)
+                       slots=(recv, send), ks=ks, shifts=shifts, axis=axis,
+                       overlap=overlap)
 
 
-def allgather_phase_static(bundle, n: int,
-                           axis: Optional[str] = None) -> PhaseStatic:
+def allgather_phase_static(bundle, n: int, axis: Optional[str] = None,
+                           overlap: bool = False) -> PhaseStatic:
     """Audit record of an all-to-all broadcast phase: only the receive
     table is static per rank (send slots are derived per root row via
     Condition 2's base rotation at run time)."""
@@ -202,11 +208,12 @@ def allgather_phase_static(bundle, n: int,
     shifts = tuple(int(bundle.skip[int(k)]) for k in ks)
     return PhaseStatic(kind="allgather", direction="fwd", p=bundle.p,
                        root=bundle.root, n=int(n), nslots=int(n) + 1,
-                       slots=(recv,), ks=ks, shifts=shifts, axis=axis)
+                       slots=(recv,), ks=ks, shifts=shifts, axis=axis,
+                       overlap=overlap)
 
 
-def reduce_phase_static(bundle, n: int,
-                        axis: Optional[str] = None) -> PhaseStatic:
+def reduce_phase_static(bundle, n: int, axis: Optional[str] = None,
+                        overlap: bool = False) -> PhaseStatic:
     """Audit record of a reversed reduction phase (identity-pinned root
     column, n+2-slot layout; partials travel against the skips)."""
     fwd, acc, ks = reduce_slot_plan(bundle, n)
@@ -214,11 +221,12 @@ def reduce_phase_static(bundle, n: int,
                    for k in ks)
     return PhaseStatic(kind="reduce", direction="rev", p=bundle.p,
                        root=bundle.root, n=int(n), nslots=int(n) + 2,
-                       slots=(fwd, acc), ks=ks, shifts=shifts, axis=axis)
+                       slots=(fwd, acc), ks=ks, shifts=shifts, axis=axis,
+                       overlap=overlap)
 
 
-def scatter_phase_static(bundle, n: int,
-                         axis: Optional[str] = None) -> PhaseStatic:
+def scatter_phase_static(bundle, n: int, axis: Optional[str] = None,
+                         overlap: bool = False) -> PhaseStatic:
     """Audit record of a reduce-scatter phase (unpinned reversed tables,
     n+1-slot layout with drain-after-send routing)."""
     fwd, acc, ks = scatter_slot_plan(bundle, n)
@@ -226,7 +234,8 @@ def scatter_phase_static(bundle, n: int,
                    for k in ks)
     return PhaseStatic(kind="scatter", direction="rev", p=bundle.p,
                        root=bundle.root, n=int(n), nslots=int(n) + 1,
-                       slots=(fwd, acc), ks=ks, shifts=shifts, axis=axis)
+                       slots=(fwd, acc), ks=ks, shifts=shifts, axis=axis,
+                       overlap=overlap)
 
 
 # ------------------------------------------------------------- interface
@@ -256,10 +265,27 @@ class RoundStep:
         *updated* buffer (pipeline: forward next what was just received)."""
         raise NotImplementedError
 
+    def shuffle_staged(self, buf, msg, pre, recv_idx, send_idx):
+        """Overlap-staged shuffle -> (new_buf, out_msg): ``pre`` is the
+        next send block packed from the PRE-update buffer (computable
+        while the exchange is in flight); the step writes msg into the
+        recv slots and patches the one stale case recv == send.
+        Bit-exact vs :meth:`shuffle` under the write-once invariant."""
+        raise NotImplementedError
+
     def acc_shuffle(self, buf, msg, acc_idx, fwd_idx, *, op: str = "sum"):
         """Fused accumulate+capture/drain -> (new_buf, out_msg):
         buf[acc] op= msg, then out = buf[fwd] (post-accumulate when the
         slots coincide), then buf[fwd] = identity(op, dtype)."""
+        raise NotImplementedError
+
+    def acc_shuffle_staged(self, buf, msg, pre, acc_idx, fwd_idx, *,
+                           op: str = "sum"):
+        """Overlap-staged acc_shuffle -> (new_buf, out_msg): ``pre`` is
+        the next fwd block packed from the PRE-accumulate buffer; the
+        step accumulates, patches the coincident fwd == acc case with
+        the combined value, and drains.  Bit-exact vs
+        :meth:`acc_shuffle`."""
         raise NotImplementedError
 
     def qacc_shuffle(self, buf, err, qmsg, smsg, acc_idx, fwd_idx):
@@ -290,9 +316,18 @@ class JnpRoundStep(RoundStep):
     def shuffle(self, buf, msg, recv_idx, send_idx):
         return _jnp_call("block_shuffle_ref", buf, msg, recv_idx, send_idx)
 
+    def shuffle_staged(self, buf, msg, pre, recv_idx, send_idx):
+        return _jnp_call("block_shuffle_staged_ref", buf, msg, pre,
+                         recv_idx, send_idx)
+
     def acc_shuffle(self, buf, msg, acc_idx, fwd_idx, *, op: str = "sum"):
         return _jnp_call("block_acc_shuffle_ref", buf, msg, acc_idx, fwd_idx,
                          op=op)
+
+    def acc_shuffle_staged(self, buf, msg, pre, acc_idx, fwd_idx, *,
+                           op: str = "sum"):
+        return _jnp_call("block_acc_shuffle_staged_ref", buf, msg, pre,
+                         acc_idx, fwd_idx, op=op)
 
     def qacc_shuffle(self, buf, err, qmsg, smsg, acc_idx, fwd_idx):
         return _jnp_call("block_qacc_shuffle_ref", buf, err, qmsg, smsg,
@@ -347,11 +382,24 @@ class PallasRoundStep(RoundStep):
         return schedule_shuffle(buf, msg, recv_idx, send_idx,
                                 interpret=self.interpret)
 
+    def shuffle_staged(self, buf, msg, pre, recv_idx, send_idx):
+        from repro.kernels.ops import schedule_shuffle_staged
+
+        return schedule_shuffle_staged(buf, msg, pre, recv_idx, send_idx,
+                                       interpret=self.interpret)
+
     def acc_shuffle(self, buf, msg, acc_idx, fwd_idx, *, op: str = "sum"):
         from repro.kernels.ops import schedule_acc_shuffle
 
         return schedule_acc_shuffle(buf, msg, acc_idx, fwd_idx, op=op,
                                     interpret=self.interpret)
+
+    def acc_shuffle_staged(self, buf, msg, pre, acc_idx, fwd_idx, *,
+                           op: str = "sum"):
+        from repro.kernels.ops import schedule_acc_shuffle_staged
+
+        return schedule_acc_shuffle_staged(buf, msg, pre, acc_idx, fwd_idx,
+                                           op=op, interpret=self.interpret)
 
     def qacc_shuffle(self, buf, err, qmsg, smsg, acc_idx, fwd_idx):
         from repro.kernels.ops import schedule_qacc_shuffle

@@ -124,6 +124,8 @@ UNPACK_ALIASES = {2: 0}      # buffers (3rd operand) -> output
 SHUFFLE_ALIASES = {4: 0}     # 2nd buffer operand -> new_buffers
 ACC_ALIASES = {4: 0}         # 2nd buffer operand -> new_buffers
 QACC_ALIASES = {5: 0, 6: 1}  # 2nd buffer operand -> new_buffers, err -> new_err
+SHUFFLE_STAGED_ALIASES = {4: 0}  # buffers operand -> new_buffers
+ACC_STAGED_ALIASES = {4: 0}      # buffers operand -> new_buffers
 
 
 # ------------------------------------------------------------------- pack
@@ -251,6 +253,66 @@ def block_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
       msg, buffers, buffers)
 
 
+# ---------------------------- staged shuffle (overlapped executor mode)
+
+
+def _shuffle_staged_kernel(recv_ref, send_ref, msg_ref, pre_ref, alias_ref,
+                           outbuf_ref, outmsg_ref):
+    r = pl.program_id(0)
+    del alias_ref  # aliased with outbuf; untouched slots keep contents
+    # unpack: the received message lands in this row's recv slot
+    outbuf_ref[...] = msg_ref[...][None]
+    # the round-t+1 send block was packed from the PRE-update buffer
+    # (``pre``) before the exchange completed; the unpack only changed
+    # the recv slot, so the staged block is stale exactly when the next
+    # send slot IS the recv slot -- patch that one case with the message.
+    same = recv_ref[r] == send_ref[r]
+    outmsg_ref[...] = jnp.where(same, msg_ref[...], pre_ref[...])
+
+
+def block_shuffle_staged(buffers: jnp.ndarray, msg: jnp.ndarray,
+                         pre: jnp.ndarray, recv_idx: jnp.ndarray,
+                         send_idx: jnp.ndarray, *, interpret=None):
+    """Overlap-staged variant of :func:`block_shuffle`.
+
+    ``pre`` [R, bs] is round t+1's send block packed from the buffer
+    *before* round t's delivery landed, so it can be computed while the
+    round-t exchange is still in flight.  The kernel writes ``msg`` into
+    the recv slots and selects the outgoing message as ``msg`` where
+    ``recv_idx == send_idx`` (the pipeline case -- the only slot the
+    unpack changed) and ``pre`` everywhere else.  Bit-exact vs
+    ``block_shuffle(buffers, msg, recv_idx, send_idx)`` whenever the
+    schedule writes each slot at most once (the write-once invariant the
+    static auditor proves).  Returns ``(new_buffers, out_msg)``.
+    """
+    R, nslots, bs = buffers.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R,),
+        in_specs=[
+            pl.BlockSpec((1, bs), _row_map2),
+            pl.BlockSpec((1, bs), _row_map2),
+            # aliased buffer: the recv block (overwritten by the kernel)
+            pl.BlockSpec((1, 1, bs), _recv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bs), _recv_map),
+            pl.BlockSpec((1, bs), _row_map2),
+        ],
+    )
+    return pl.pallas_call(
+        _shuffle_staged_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
+            jax.ShapeDtypeStruct((R, bs), buffers.dtype),
+        ],
+        input_output_aliases=SHUFFLE_STAGED_ALIASES,
+        interpret=_resolve(interpret),
+    )(recv_idx.astype(jnp.int32), send_idx.astype(jnp.int32),
+      msg, pre, buffers)
+
+
 # ------------------------------------- fused accumulate+capture (reduce)
 
 
@@ -323,6 +385,84 @@ def block_acc_shuffle(buffers: jnp.ndarray, msg: jnp.ndarray,
         interpret=_resolve(interpret),
     )(acc_idx.astype(jnp.int32), fwd_idx.astype(jnp.int32),
       msg, buffers, buffers)
+
+
+# ------------------- staged accumulate+capture (overlapped reduce mode)
+
+
+def _acc_shuffle_staged_kernel(acc_ref, fwd_ref, msg_ref, pre_ref, alias_ref,
+                               outbuf_ref, outmsg_ref, scratch_ref,
+                               *, op, identity):
+    r = pl.program_id(0)
+    s = pl.program_id(1)
+    # Same two-step grid as _acc_shuffle_kernel (s=0 accumulate, s=1
+    # drain), but the captured outgoing partial for the non-coincident
+    # case comes from ``pre`` -- the fwd block packed from the
+    # PRE-update buffer while the exchange was in flight -- instead of a
+    # second read-only buffer view.  The accumulate only changed the acc
+    # slot, so ``pre`` is stale exactly when fwd == acc; patch that case
+    # with the freshly combined value.
+    combined = op_combine(op)(alias_ref[0, 0], msg_ref[...])
+
+    @pl.when(s == 0)
+    def _():
+        same = acc_ref[r] == fwd_ref[r]
+        scratch_ref[...] = jnp.where(same, combined, pre_ref[...])
+
+    ident = jnp.full_like(msg_ref[...], identity)
+    outbuf_ref[...] = jnp.where(s == 0, combined, ident)[None]
+    outmsg_ref[...] = scratch_ref[...]
+
+
+def block_acc_shuffle_staged(buffers: jnp.ndarray, msg: jnp.ndarray,
+                             pre: jnp.ndarray, acc_idx: jnp.ndarray,
+                             fwd_idx: jnp.ndarray, *, op: str = "sum",
+                             interpret=None):
+    """Overlap-staged variant of :func:`block_acc_shuffle`.
+
+    ``pre`` [R, bs] is round t+1's fwd block packed from the buffer
+    *before* round t's partial was accumulated, so it can be computed
+    while the round-t exchange is still in flight.  Per row r:
+
+      1. ``buffers[r, acc_idx[r]] op= msg[r]``   (accumulate, round t)
+      2. ``out_msg[r]`` = the combined value where ``fwd_idx == acc_idx``
+         (the only slot step 1 changed), ``pre[r]`` otherwise
+      3. ``buffers[r, fwd_idx[r]] = identity(op, dtype)``  (drain)
+
+    Bit-exact vs ``block_acc_shuffle(buffers, msg, acc_idx, fwd_idx)``:
+    the sequential capture also reads pre-accumulate content everywhere
+    except the coincident slot.  Returns ``(new_buffers, out_msg)``.
+    """
+    R, nslots, bs = buffers.shape
+    identity = op_identity(op, buffers.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R, 2),
+        in_specs=[
+            pl.BlockSpec((1, bs), _row_map_rs),
+            pl.BlockSpec((1, bs), _row_map_rs),
+            # aliased buffer: acc block at s=0, fwd block at s=1
+            pl.BlockSpec((1, 1, bs), _step_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bs), _step_map),
+            pl.BlockSpec((1, bs), _row_map_rs),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bs), buffers.dtype)],
+    )
+    kern = functools.partial(
+        _acc_shuffle_staged_kernel, op=op, identity=identity)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((R, nslots, bs), buffers.dtype),
+            jax.ShapeDtypeStruct((R, bs), buffers.dtype),
+        ],
+        input_output_aliases=ACC_STAGED_ALIASES,
+        interpret=_resolve(interpret),
+    )(acc_idx.astype(jnp.int32), fwd_idx.astype(jnp.int32),
+      msg, pre, buffers)
 
 
 # --------------------- fused dequantize+accumulate+requantize (reduce)
@@ -487,7 +627,8 @@ class KernelAudit:
 
 
 KERNEL_NAMES = ("block_pack", "block_unpack", "block_shuffle",
-                "block_acc_shuffle", "block_qacc_shuffle")
+                "block_shuffle_staged", "block_acc_shuffle",
+                "block_acc_shuffle_staged", "block_qacc_shuffle")
 
 
 def _live_acc_step(g) -> bool:
@@ -543,6 +684,23 @@ def kernel_audit_spec(name: str, *, R: int, nslots: int, bs: int,
             ),
             aliases=tuple(sorted(SHUFFLE_ALIASES.items())), drain_dims=(),
             out_dtypes=lambda dt: (dt, dt))
+    if name == "block_shuffle_staged":
+        return KernelAudit(
+            name=name, grid=(R,), num_scalar_prefetch=2,
+            scalar_names=("recv_idx", "send_idx"),
+            inputs=(
+                OperandAudit("msg", "msg", _row_map2, (1, bs)),
+                OperandAudit("pre", "pre", _row_map2, (1, bs)),
+                OperandAudit("alias", "buf", _recv_map, (1, 1, bs),
+                             live=lambda g: False),
+            ),
+            outputs=(
+                OperandAudit("outbuf", "buf", _recv_map, (1, 1, bs)),
+                OperandAudit("outmsg", "outmsg", _row_map2, (1, bs)),
+            ),
+            aliases=tuple(sorted(SHUFFLE_STAGED_ALIASES.items())),
+            drain_dims=(),
+            out_dtypes=lambda dt: (dt, dt))
     if name == "block_acc_shuffle":
         return KernelAudit(
             name=name, grid=(R, 2), num_scalar_prefetch=2,
@@ -560,6 +718,25 @@ def kernel_audit_spec(name: str, *, R: int, nslots: int, bs: int,
                 OperandAudit("outmsg", "outmsg", _row_map_rs, (1, bs)),
             ),
             aliases=tuple(sorted(ACC_ALIASES.items())), drain_dims=(1,),
+            out_dtypes=lambda dt: (dt, dt))
+    if name == "block_acc_shuffle_staged":
+        return KernelAudit(
+            name=name, grid=(R, 2), num_scalar_prefetch=2,
+            scalar_names=("acc_idx", "fwd_idx"),
+            inputs=(
+                OperandAudit("msg", "msg", _row_map_rs, (1, bs),
+                             live=_live_acc_step),
+                OperandAudit("pre", "pre", _row_map_rs, (1, bs),
+                             live=_live_acc_step),
+                OperandAudit("alias", "buf", _step_map, (1, 1, bs),
+                             live=_live_acc_step),
+            ),
+            outputs=(
+                OperandAudit("outbuf", "buf", _step_map, (1, 1, bs)),
+                OperandAudit("outmsg", "outmsg", _row_map_rs, (1, bs)),
+            ),
+            aliases=tuple(sorted(ACC_STAGED_ALIASES.items())),
+            drain_dims=(1,),
             out_dtypes=lambda dt: (dt, dt))
     if name == "block_qacc_shuffle":
         return KernelAudit(

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .block_pack import _resolve
+
 NEG_INF = -1e30
 
 
@@ -95,7 +97,7 @@ def flash_attention(
     window: Optional[int] = None,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     seq_kv: Optional[int] = None,
     kv_map: Optional[int] = None,         # GQA repeat factor (H // Hkv)
 ):
@@ -143,6 +145,6 @@ def flash_attention(
             pltpu.VMEM((block_q, 1), jnp.float32),      # l
             pltpu.VMEM((block_q, hd_v), jnp.float32),   # acc
         ],
-        interpret=interpret,
+        interpret=_resolve(interpret),
     )(q, k, v)
     return out[:, :Sq]

@@ -16,9 +16,11 @@ import jax.numpy as jnp
 
 from .block_pack import (
     block_acc_shuffle,
+    block_acc_shuffle_staged,
     block_pack,
     block_qacc_shuffle,
     block_shuffle,
+    block_shuffle_staged,
     block_unpack,
     default_interpret,
 )
@@ -49,13 +51,8 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
 
 @partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
                                    "interpret"))
-def gqa_flash_attention(q, k, v, *, causal=True, window=None,
-                        block_q=128, block_k=128, interpret=True):
-    """GQA wrapper: q [B, Sq, H, hd]; k/v [B, Skv, Hkv, hd(_v)].
-
-    Flattens (batch, head) onto the kernel grid; kv heads are shared via
-    the kernel's kv_map index (no repeat materialization).
-    """
+def _gqa_flash_attention(q, k, v, *, causal, window, block_q, block_k,
+                         interpret):
     B, Sq, H, hd = q.shape
     Skv, Hkv = k.shape[1], k.shape[2]
     hd_v = v.shape[-1]
@@ -71,9 +68,23 @@ def gqa_flash_attention(q, k, v, *, causal=True, window=None,
     return of.reshape(B, H, Sq, hd_v).transpose(0, 2, 1, 3)
 
 
+def gqa_flash_attention(q, k, v, *, causal=True, window=None,
+                        block_q=128, block_k=128, interpret=None):
+    """GQA wrapper: q [B, Sq, H, hd]; k/v [B, Skv, Hkv, hd(_v)].
+
+    Flattens (batch, head) onto the kernel grid; kv heads are shared via
+    the kernel's kv_map index (no repeat materialization).
+
+    ``interpret=None`` auto-detects the platform (compiled on TPU,
+    interpret-mode elsewhere), as in :func:`schedule_pack`.
+    """
+    return _gqa_flash_attention(q, k, v, causal=causal, window=window,
+                                block_q=block_q, block_k=block_k,
+                                interpret=resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
-def mamba2_ssd(x, B_, C_, dt, A_log, D, *, chunk=64, interpret=True):
-    """x: [B, S, H, P]; B_/C_: [B, S, G, N]; dt: [B, S, H]; A_log/D: [H]."""
+def _mamba2_ssd(x, B_, C_, dt, A_log, D, *, chunk, interpret):
     Bsz, S, H, P = x.shape
     G, N = B_.shape[2], B_.shape[3]
     rep = H // G
@@ -85,6 +96,16 @@ def mamba2_ssd(x, B_, C_, dt, A_log, D, *, chunk=64, interpret=True):
     d = jnp.tile(D, Bsz)
     yf = ssd_scan(xf, Bh, Ch, dtf, alog, d, chunk=chunk, interpret=interpret)
     return yf.reshape(Bsz, H, S, P).transpose(0, 2, 1, 3)
+
+
+def mamba2_ssd(x, B_, C_, dt, A_log, D, *, chunk=64, interpret=None):
+    """x: [B, S, H, P]; B_/C_: [B, S, G, N]; dt: [B, S, H]; A_log/D: [H].
+
+    ``interpret=None`` auto-detects the platform (compiled on TPU,
+    interpret-mode elsewhere), as in :func:`schedule_pack`.
+    """
+    return _mamba2_ssd(x, B_, C_, dt, A_log, D, chunk=chunk,
+                       interpret=resolve_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -127,6 +148,21 @@ def schedule_shuffle(buffers, msg, recv_idx, send_idx, *, interpret=None):
                              interpret=resolve_interpret(interpret))
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def _schedule_shuffle_staged(buffers, msg, pre, recv_idx, send_idx, *,
+                             interpret):
+    return block_shuffle_staged(buffers, msg, pre, recv_idx, send_idx,
+                                interpret=interpret)
+
+
+def schedule_shuffle_staged(buffers, msg, pre, recv_idx, send_idx, *,
+                            interpret=None):
+    """Overlap-staged round step: ``pre`` is round t+1's send block
+    packed before round t's delivery landed (see block_shuffle_staged)."""
+    return _schedule_shuffle_staged(buffers, msg, pre, recv_idx, send_idx,
+                                    interpret=resolve_interpret(interpret))
+
+
 @partial(jax.jit, static_argnames=("op", "interpret"))
 def _schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, *, op, interpret):
     return block_acc_shuffle(buffers, msg, acc_idx, fwd_idx, op=op,
@@ -138,6 +174,23 @@ def schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, *, op="sum",
     """Fused accumulate(t)+capture/drain(t+1) round step (reduce family)."""
     return _schedule_acc_shuffle(buffers, msg, acc_idx, fwd_idx, op=op,
                                  interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("op", "interpret"))
+def _schedule_acc_shuffle_staged(buffers, msg, pre, acc_idx, fwd_idx, *, op,
+                                 interpret):
+    return block_acc_shuffle_staged(buffers, msg, pre, acc_idx, fwd_idx,
+                                    op=op, interpret=interpret)
+
+
+def schedule_acc_shuffle_staged(buffers, msg, pre, acc_idx, fwd_idx, *,
+                                op="sum", interpret=None):
+    """Overlap-staged reduce round step: ``pre`` is round t+1's fwd block
+    packed before round t's partial accumulated (see
+    block_acc_shuffle_staged)."""
+    return _schedule_acc_shuffle_staged(buffers, msg, pre, acc_idx, fwd_idx,
+                                        op=op,
+                                        interpret=resolve_interpret(interpret))
 
 
 @partial(jax.jit, static_argnames=("interpret",))

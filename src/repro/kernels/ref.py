@@ -45,6 +45,45 @@ def block_shuffle_ref(buffers, msg, recv_idx, send_idx):
     return buffers, out
 
 
+def block_shuffle_staged_ref(buffers, msg, pre, recv_idx, send_idx):
+    """Overlap-staged shuffle oracle: ``pre`` is the round-t+1 block
+    packed from the PRE-update buffer (before round t's delivery
+    landed).  Write msg at the recv slots; the outgoing message is msg
+    where the pipeline case ``send == recv`` holds (the only slot the
+    update changed) and ``pre`` everywhere else -- bit-exact vs
+    :func:`block_shuffle_ref`.  Returns (new_buffers, out_msg)."""
+    rows = jnp.arange(buffers.shape[0])
+    buffers = buffers.at[rows, recv_idx].set(msg, mode="promise_in_bounds")
+    out = jnp.where((recv_idx == send_idx)[:, None], msg, pre)
+    return buffers, out
+
+
+def block_acc_shuffle_staged_ref(buffers, msg, pre, acc_idx, fwd_idx,
+                                 op="sum"):
+    """Overlap-staged accumulate+capture/drain oracle: ``pre`` is the
+    round-t+1 fwd block packed from the PRE-update buffer.  Accumulate
+    msg into the acc slots; the captured output is the freshly combined
+    value where ``fwd == acc`` (the clamped same-slot case) and ``pre``
+    everywhere else, then the fwd slots drain to the op identity --
+    bit-exact vs :func:`block_acc_shuffle_ref`.
+    Returns (new_buffers, out_msg)."""
+    from .reduce_ops import op_combine, op_identity
+
+    combine = op_combine(op)
+    rows = jnp.arange(buffers.shape[0])
+    cur = jnp.take_along_axis(buffers, acc_idx[:, None, None], axis=1)[:, 0]
+    combined = combine(cur, msg)
+    buffers = buffers.at[rows, acc_idx].set(
+        combined, mode="promise_in_bounds"
+    )
+    out = jnp.where((acc_idx == fwd_idx)[:, None], combined, pre)
+    ident = op_identity(op, buffers.dtype)
+    buffers = buffers.at[rows, fwd_idx].set(
+        jnp.full_like(out, ident), mode="promise_in_bounds"
+    )
+    return buffers, out
+
+
 def block_acc_shuffle_ref(buffers, msg, acc_idx, fwd_idx, op="sum"):
     """Fused accumulate+capture/drain oracle (capture-drain-accumulate
     order of docs/collectives.md): accumulate msg into the acc slots,

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .block_pack import _resolve
+
 
 def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, alog_ref, d_ref, y_ref, s_scr,
                 *, chunk: int):
@@ -65,7 +67,7 @@ def _ssd_kernel(x_ref, b_ref, c_ref, dt_ref, alog_ref, d_ref, y_ref, s_scr,
     y_ref[0] = (y + x * D).astype(y_ref.dtype)
 
 
-def ssd_scan(x, B_, C_, dt, A_log, D, *, chunk: int = 64, interpret: bool = True):
+def ssd_scan(x, B_, C_, dt, A_log, D, *, chunk: int = 64, interpret=None):
     """x: [BH, S, P]; B_/C_: [BH, S, N]; dt: [BH, S]; A_log/D: [BH].
 
     Returns y: [BH, S, P] = SSD(x) + D*x, matching ref.ssd_ref.
@@ -99,6 +101,6 @@ def ssd_scan(x, B_, C_, dt, A_log, D, *, chunk: int = 64, interpret: bool = True
         out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, nc * chunk, P), x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        interpret=interpret,
+        interpret=_resolve(interpret),
     )(x, B_, C_, dt2, alog2, d2)
     return y[:, :S]

@@ -43,7 +43,7 @@ replaces the ring's 2(p-1) latency terms with 2(n-1)+2*ceil(log2 p)
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +74,7 @@ __all__ = [
     "unbucketize",
     "init_grad_sync_state",
     "compressed_grad_sync",
+    "streamed_sync_params",
 ]
 
 
@@ -354,3 +355,116 @@ def compressed_grad_sync(grads, err_buckets, axis_name: str, p: int,
     mean_tree, deltas = unbucketize(means, spec, grads)
     new_errs = tuple(e + d for e, d in zip(errs, deltas))
     return mean_tree, new_errs
+
+
+# ------------------------------------------------- streamed bucket sync
+#
+# The bucket-at-a-time alternative to compressed_grad_sync: instead of
+# syncing the fully materialized gradient after the backward completes,
+# each parameter bucket is wrapped in a custom_vjp identity whose
+# BACKWARD rule runs that bucket's quantized circulant allreduce on the
+# incoming cotangent.  Reverse-mode AD reaches a bucket's marker as soon
+# as the last layer touching it has been differentiated, so bucket k's
+# allreduce enters the graph with no data dependence on the still-
+# pending backward of earlier layers -- XLA's scheduler can run the
+# collective while that compute proceeds (bucket streaming).  The new
+# error-feedback state leaves the backward as the cotangent of the
+# error input; gradient accumulation rides in as an explicit ``acc``
+# operand (custom_vjp rules must not close over tracers).
+
+
+def _leaf_meta(leaves) -> Tuple[Tuple[Tuple[int, ...], Any, int], ...]:
+    return tuple((tuple(leaf.shape), leaf.dtype,
+                  int(np.prod(leaf.shape)) if leaf.shape else 1)
+                 for leaf in leaves)
+
+
+def _make_bucket_sync(meta, axis_name: str, p: int, backend: str,
+                      accum_scale: float, n_blocks: Optional[int],
+                      qblock: Optional[int]):
+    """Build the per-bucket custom_vjp sync marker.
+
+    ``sync(err, acc, *leaves)`` is the identity on ``leaves``; its VJP
+    returns ``(new_err, 0, *synced_cts)`` where ``synced_cts`` is the
+    lossy mean of ``(acc + cotangents) * accum_scale + err`` across the
+    ``axis_name`` ranks and ``new_err`` the updated error-feedback
+    bucket (SUM units, downcast deltas folded in)."""
+
+    @jax.custom_vjp
+    def sync(err, acc, *leaves):
+        return leaves
+
+    def fwd(err, acc, *leaves):
+        return leaves, (err, acc)
+
+    def bwd(res, cts):
+        err, acc = res
+        from repro.core.comm import circulant_qallreduce_body
+
+        parts = [ct.astype(jnp.float32).reshape(-1) for ct in cts]
+        flat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        target = (acc + flat) * accum_scale + err
+        sums, errs = circulant_qallreduce_body(
+            [target], axis_name, p, n_blocks=n_blocks, backend=backend,
+            qblock=qblock)
+        mean = sums[0] / p
+        new_err = errs[0].reshape(-1)
+        out_cts, off = [], 0
+        for shape, dtype, size in meta:
+            sl = jax.lax.dynamic_slice(mean, (off,), (size,))
+            cast, delta = _cast_with_delta(sl, dtype)
+            out_cts.append(cast.reshape(shape))
+            new_err = jax.lax.dynamic_update_slice(
+                new_err, jax.lax.dynamic_slice(new_err, (off,), (size,))
+                + delta, (off,))
+            off += size
+        return (new_err, jnp.zeros_like(acc)) + tuple(out_cts)
+
+    sync.defvjp(fwd, bwd)
+    return sync
+
+
+def streamed_sync_params(params, err_buckets, acc_buckets,
+                         spec: BucketSpec, axis_name: str, p: int, *,
+                         backend: str = "jnp", accum_scale: float = 1.0,
+                         n_blocks: Optional[int] = None,
+                         qblock: Optional[int] = None):
+    """Wrap each parameter bucket in a streamed sync marker (inside
+    shard_map over ``axis_name``).
+
+    Returns a tree identical to ``params`` in the forward.  Under
+    ``jax.value_and_grad(loss, argnums=(params, err_buckets))`` of a
+    loss computed THROUGH the returned tree, the params gradient is the
+    error-fed lossy mean of ``(acc_buckets + local_grads) * accum_scale``
+    -- synced bucket by bucket as the backward produces each bucket's
+    cotangent, so bucket k's allreduce overlaps the backward of the
+    layers feeding buckets k+1.. -- and the err_buckets gradient is the
+    new error-feedback state (the same SUM-unit convention as
+    :func:`compressed_grad_sync`).
+
+    ``acc_buckets`` carries previously accumulated raw gradient buckets
+    (zeros when there is no accumulation); ``accum_scale`` is the
+    microbatch-mean factor applied to ``acc + grad`` before the sync.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+    if len(leaves) != len(spec.leaf_sizes):
+        raise ValueError(f"params tree has {len(leaves)} leaves, spec "
+                         f"expects {len(spec.leaf_sizes)}")
+    if len(err_buckets) != spec.num_buckets:
+        raise ValueError(f"{len(err_buckets)} error buckets, spec expects "
+                         f"{spec.num_buckets}")
+    groups: List[List[Any]] = [[] for _ in spec.bucket_sizes]
+    for leaf, b in zip(leaves, spec.assignment):
+        groups[b].append(leaf)
+    synced: List[List[Any]] = []
+    for b, group in enumerate(groups):
+        sync = _make_bucket_sync(_leaf_meta(group), axis_name, p, backend,
+                                 float(accum_scale), n_blocks, qblock)
+        synced.append(list(sync(err_buckets[b].reshape(-1),
+                                acc_buckets[b].reshape(-1), *group)))
+    # stitch the bucket groups back into flatten order
+    out, taken = [], [0] * spec.num_buckets
+    for b in spec.assignment:
+        out.append(synced[b][taken[b]])
+        taken[b] += 1
+    return treedef.unflatten(out)

@@ -33,9 +33,11 @@ from repro.models.common import ModelConfig
 from repro.models.transformer import init_params, loss_fn
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state
 from repro.optim.compression import (
+    bucketize,
     compressed_grad_sync,
     init_grad_sync_state,
     make_bucket_spec,
+    streamed_sync_params,
 )
 
 
@@ -55,6 +57,12 @@ class TrainConfig:
     # f32 payload per gradient bucket.
     grad_sync_backend: str = "jnp"   # jnp | pallas
     bucket_bytes: int = 4 << 20
+    # stream the bucket sync: run each gradient bucket's quantized
+    # allreduce inside the backward via per-bucket custom_vjp markers
+    # (bucket k's collective overlaps the backward of the layers feeding
+    # buckets k+1..) instead of syncing the materialized gradient after
+    # the backward.  Ignored for grad_sync='auto'.
+    stream_grad_sync: bool = False
 
 
 def grad_bucket_spec(cfg: ModelConfig, tcfg: TrainConfig):
@@ -208,8 +216,67 @@ def _make_compressed_step(cfg, tcfg, mesh, dp, compute_grads, finish):
         )
         return new_params, new_opt, tuple(e[None] for e in new_errs), metrics
 
+    def loss_for(p, mb):
+        return loss_fn(p, cfg, mb, remat=tcfg.remat)
+
+    nbm = tcfg.microbatches
+    acc_dt = (jnp.bfloat16 if tcfg.grad_acc_dtype == "bfloat16"
+              else jnp.float32)
+
+    def streamed_body(params, opt, errs, batch):
+        # Bucket streaming: the loss is computed THROUGH per-bucket sync
+        # markers, so reverse-mode AD runs bucket k's quantized allreduce
+        # the moment its cotangent is complete -- the collective has no
+        # data dependence on the still-pending backward of the earlier
+        # layers, and XLA overlaps the two.  With gradient accumulation,
+        # the first nbm-1 microbatches accumulate raw local gradients
+        # and only the final microbatch's backward streams the sync of
+        # the accumulated total.
+        err_flat = tuple(e[0] for e in errs)
+        if nbm > 1:
+            mbs = _microbatch(batch, nbm)
+            lead = jax.tree.map(lambda x: x[:-1], mbs)
+            last = jax.tree.map(lambda x: x[-1], mbs)
+            grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _metrics), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g
+                )
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda q: jnp.zeros(q.shape, acc_dt), params)
+            (g_lead, loss_lead), _ = jax.lax.scan(
+                acc_step, (g0, jnp.float32(0)), lead
+            )
+            acc_buckets = bucketize(g_lead, spec)
+        else:
+            last = batch
+            loss_lead = jnp.float32(0)
+            acc_buckets = [jnp.zeros((s,), jnp.float32)
+                           for s in spec.bucket_sizes]
+
+        def streamed_loss(ps, err_b, mb):
+            synced = streamed_sync_params(
+                ps, err_b, acc_buckets, spec, axis, dp,
+                backend=tcfg.grad_sync_backend, accum_scale=1.0 / nbm,
+            )
+            return loss_for(synced, mb)
+
+        ((loss, metrics), (mean_grads, new_errs)) = jax.value_and_grad(
+            streamed_loss, argnums=(0, 1), has_aux=True
+        )(params, err_flat, last)
+        loss = jax.lax.pmean((loss_lead + loss) / nbm, axis)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, axis), metrics)
+        new_params, new_opt, metrics = finish(
+            params, opt, mean_grads, loss, metrics
+        )
+        return new_params, new_opt, tuple(e[None] for e in new_errs), metrics
+
     sharded_body = shard_map(
-        body,
+        streamed_body if tcfg.stream_grad_sync else body,
         mesh=mesh,
         in_specs=(P(), P(), (P(axis),) * nb, P(axis)),
         out_specs=(P(), P(), (P(axis),) * nb, P()),

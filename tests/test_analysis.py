@@ -402,6 +402,30 @@ def test_host_plane_jax_import_rejected():  # class 20: host-plane-jax
     assert not lint_source("import jax\n", "models/x.py", host_plane=False)
 
 
+def test_kernel_interpret_default_rejected():  # class 22: kernel-interpret
+    """Public kernel entry points must default interpret=None (platform
+    auto-detect via resolve_interpret): a baked-in True never compiles
+    the kernel on a real accelerator, a baked-in False breaks every
+    host-only environment."""
+    for baked in ("True", "False"):
+        src = (f"def schedule_op(x, *, interpret={baked}):\n"
+               f"    return x\n")
+        findings = lint_source(src, "kernels/x.py", kernel_plane=True)
+        assert any(f.check == "kernel-interpret" for f in findings), findings
+    # interpret=None is the sanctioned default
+    assert not lint_source(
+        "def schedule_op(x, *, interpret=None):\n    return x\n",
+        "kernels/x.py", kernel_plane=True)
+    # private helpers may thread a resolved bool
+    assert not lint_source(
+        "def _impl(x, interpret=True):\n    return x\n",
+        "kernels/x.py", kernel_plane=True)
+    # non-kernel-plane modules are out of scope for this rule
+    assert not lint_source(
+        "def schedule_op(x, *, interpret=True):\n    return x\n",
+        "train/x.py", kernel_plane=False)
+
+
 def test_undocumented_symbol_rejected(tmp_path):  # class 21: api-doc
     (tmp_path / "src/repro/core").mkdir(parents=True)
     (tmp_path / "docs").mkdir()

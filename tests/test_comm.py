@@ -323,6 +323,84 @@ def test_plan_cache_clear_and_info():
     assert hp2 is not hp1  # rebuilt after the clear
 
 
+@pytest.mark.plan_cache_mutating
+def test_plan_cache_limit_lru():
+    """plan_cache_limit(k): k-most-recently-USED retention -- hits
+    refresh recency, insertions evict the oldest, identity holds while
+    resident, and plan_cache_limit(None) restores the unbounded
+    default."""
+    from repro.core.engine import (cached_plan, plan_cache_clear,
+                                   plan_cache_info, plan_cache_limit)
+
+    plan_cache_clear()
+    assert plan_cache_limit() is None  # unbounded default
+    try:
+        plan_cache_limit(2)
+        a = cached_plan(("lru", 1), object)
+        b = cached_plan(("lru", 2), object)
+        assert cached_plan(("lru", 1), object) is a  # hit refreshes 1
+        cached_plan(("lru", 3), object)              # evicts 2, not 1
+        assert plan_cache_info()["size"] == 2
+        assert cached_plan(("lru", 1), object) is a  # still resident
+        assert cached_plan(("lru", 2), object) is not b  # evicted, rebuilt
+        # lowering the bound evicts immediately, oldest first
+        plan_cache_limit(1)
+        assert plan_cache_info()["size"] == 1
+        assert cached_plan(("lru", 2), object) is not None  # survivor = MRU
+        # removing the bound keeps entries and stops evicting
+        plan_cache_limit(None)
+        for i in range(8):
+            cached_plan(("lru", "wide", i), object)
+        assert plan_cache_info()["size"] == 9
+        with pytest.raises(ValueError, match=">= 1"):
+            plan_cache_limit(0)
+    finally:
+        plan_cache_limit(None)
+        plan_cache_clear()
+
+
+def test_optimal_blocks_never_outnumber_payload():
+    """Block-count optima are clamped to [1, max(1, m)]: a block beyond
+    the payload unit count is pure padding (moves nothing, costs a
+    round).  Swept over p x m grids including the degenerate regimes
+    (tiny m, huge analytic optima, nonfinite model output)."""
+    import math
+
+    from repro.core.costmodel import (
+        CommModel,
+        DEFAULT_MODEL,
+        optimal_hier_blocks,
+        optimal_num_blocks_allgather,
+        optimal_num_blocks_allreduce,
+        optimal_num_blocks_bcast,
+        optimal_num_blocks_reduce,
+    )
+
+    fns = (optimal_num_blocks_bcast, optimal_num_blocks_reduce,
+           optimal_num_blocks_allreduce, optimal_num_blocks_allgather)
+    # near-free latency drives the analytic optimum sqrt(q beta m/alpha)
+    # far past m; the clamp must hold for it just like the default model
+    degenerate = CommModel(alpha=1e-30, beta=1.0)
+    for model in (DEFAULT_MODEL, degenerate):
+        for p in (1, 2, 5, 36, 1024):
+            for m in (0.0, 0.5, 1.0, 2.0, 3.7, 10.0, 4e6):
+                for fn in fns:
+                    n = fn(p, m, model)
+                    assert 1 <= n <= max(1, int(m)), (fn.__name__, p, m, n)
+    # nonfinite model output degrades to the safe minimum, never raises
+    assert optimal_num_blocks_bcast(8, float("nan"), DEFAULT_MODEL) == 1
+    nan_model = CommModel(alpha=float("nan"), beta=1.0)
+    assert optimal_num_blocks_bcast(8, 100.0, nan_model) == 1
+    # hierarchical: each level clamps against its own payload volume
+    n_inter, n_intra = optimal_hier_blocks(36, 32, 2.0, 4e6,
+                                           degenerate, degenerate)
+    assert 1 <= n_inter <= 2 and 1 <= n_intra <= int(4e6)
+    for kind in ("broadcast", "reduce", "allreduce", "allgather"):
+        ni, nc = optimal_hier_blocks(6, 4, 0.5, 0.5, kind=kind)
+        assert (ni, nc) == (1, 1)
+    assert all(map(math.isfinite, optimal_hier_blocks(2, 2, 1.0, 1.0)))
+
+
 def test_deprecated_aliases_still_in_collectives_all():
     """The shim surface stays importable: everything the seed exported
     from collectives still resolves."""

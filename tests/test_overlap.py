@@ -1,0 +1,198 @@
+"""The overlapped (double-buffered) round executor.
+
+Three layers, mirroring how the mode is built:
+
+  1. kernel level: the staged round steps (``shuffle_staged``,
+     ``acc_shuffle_staged``) agree bit-exactly across backends and with
+     their defining identity vs the sequential steps -- including the
+     bypass case (send what is being received this round) the staging
+     exists for;
+  2. plan level: ``overlap=True`` host plans are bit-exact against the
+     sequential executor for every supported kind over the edge-p grid,
+     distinct cached objects carrying the flag, and the unsupported
+     kinds are rejected at plan time;
+  3. audit level: the static auditor accepts the double-buffered
+     statics over the sweep grid, rejects overlap statics for
+     unsupported kinds, and flags a plan whose executor mode disagrees
+     with its audited tables.
+
+The multidevice rows (real ``ppermute`` exchange, both backends, plus
+the streamed trainer parity check) go through tests/mp_worker.py.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import run_worker
+from repro.analysis.planaudit import (
+    audit_kind,
+    audit_plan,
+    OVERLAP_KINDS,
+    statics_for_kind,
+)
+from repro.core.comm import host_plan
+from repro.core.roundstep import get_round_step
+
+RNG = np.random.default_rng(11)
+
+BACKENDS = ["jnp", "pallas"]
+# host_plan needs p >= 2 (p=1 never plans a round loop: the device-plan
+# fast path returns the payload untouched, covered in test_comm.py).
+EDGE_PS = [2, 3, 11, 36]
+
+
+# ------------------------------------------------------- kernel level
+
+
+@pytest.mark.parametrize("R,ns,bs", [(1, 4, 8), (8, 6, 16)])
+def test_shuffle_staged_backends_and_identity(R, ns, bs):
+    import jax.numpy as jnp
+
+    buf = jnp.asarray(RNG.normal(size=(R, ns, bs)), jnp.float32)
+    msg = jnp.asarray(RNG.normal(size=(R, bs)), jnp.float32)
+    recv = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    send = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    send = send.at[0].set(recv[0])  # the bypass case staging exists for
+    jstep, pstep = get_round_step("jnp"), get_round_step("pallas")
+    pre = jstep.pack(buf, send)
+    jb, jm = jstep.shuffle_staged(buf, msg, pre, recv, send)
+    pb, pm = pstep.shuffle_staged(buf, msg, pre, recv, send)
+    np.testing.assert_array_equal(np.asarray(jb), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(jm), np.asarray(pm))
+    # defining identity: staged(pre-packed next block) == sequential
+    sb, sm = jstep.shuffle(buf, msg, recv, send)
+    np.testing.assert_array_equal(np.asarray(jb), np.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(jm), np.asarray(sm))
+
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("R,ns,bs", [(1, 4, 8), (8, 6, 16)])
+def test_acc_shuffle_staged_backends_and_identity(op, R, ns, bs):
+    import jax.numpy as jnp
+
+    buf = jnp.asarray(RNG.normal(size=(R, ns, bs)), jnp.float32)
+    msg = jnp.asarray(RNG.normal(size=(R, bs)), jnp.float32)
+    acc = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    fwd = jnp.asarray(RNG.integers(0, ns, size=R), jnp.int32)
+    fwd = fwd.at[0].set(acc[0])  # capture-after-accumulate bypass
+    jstep, pstep = get_round_step("jnp"), get_round_step("pallas")
+    pre = jstep.pack(buf, fwd)
+    jb, jm = jstep.acc_shuffle_staged(buf, msg, pre, acc, fwd, op=op)
+    pb, pm = pstep.acc_shuffle_staged(buf, msg, pre, acc, fwd, op=op)
+    np.testing.assert_array_equal(np.asarray(jb), np.asarray(pb))
+    np.testing.assert_array_equal(np.asarray(jm), np.asarray(pm))
+    sb, sm = jstep.acc_shuffle(buf, msg, acc, fwd, op=op)
+    np.testing.assert_array_equal(np.asarray(jb), np.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(jm), np.asarray(sm))
+
+
+# --------------------------------------------------------- plan level
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("p", EDGE_PS)
+def test_host_overlap_bitexact(backend, p):
+    """Every supported kind: overlapped host executor == sequential,
+    bit for bit (float payloads -- same accumulation order too)."""
+    rng = np.random.default_rng(p)
+    n, bs = 3, 5
+
+    bvals = rng.normal(size=(n, bs))
+    seq = host_plan("broadcast", p, n, root=p - 1, backend=backend)
+    ovl = host_plan("broadcast", p, n, root=p - 1, backend=backend,
+                    overlap=True)
+    assert ovl is not seq and ovl.overlap and not seq.overlap
+    np.testing.assert_array_equal(seq.run(bvals), ovl.run(bvals))
+
+    gvals = rng.normal(size=(p, n, bs))
+    np.testing.assert_array_equal(
+        host_plan("allgather", p, n, backend=backend).run(gvals),
+        host_plan("allgather", p, n, backend=backend,
+                  overlap=True).run(gvals))
+
+    for op in ("sum", "max"):
+        np.testing.assert_array_equal(
+            host_plan("reduce", p, n, root=p - 1, op=op,
+                      backend=backend).run(gvals),
+            host_plan("reduce", p, n, root=p - 1, op=op, backend=backend,
+                      overlap=True).run(gvals))
+
+
+def test_overlap_p1_fast_path():
+    """p=1 never plans a round loop: the overlapped device plan takes
+    the same identity fast path as the sequential one."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core.comm import get_comm
+
+    comm = get_comm(Mesh(np.array(jax.devices()[:1]), ("data",)), "data")
+    x = {"w": np.arange(6, dtype=np.float32).reshape(1, 6)}
+    for kind in ("broadcast", "allgather", "reduce", "allreduce"):
+        plan = comm.plan(kind, x, overlap=True)
+        assert plan.overlap
+        np.testing.assert_array_equal(plan(x)["w"], x["w"])
+
+
+def test_host_overlap_plan_identity_cached():
+    a = host_plan("broadcast", 5, 3, overlap=True)
+    b = host_plan("broadcast", 5, 3, overlap=True)
+    assert a is b  # same cache contract as sequential plans
+
+
+def test_host_overlap_unsupported_kind_rejected():
+    with pytest.raises(ValueError, match="overlap"):
+        host_plan("quantized_allreduce", 4, 3, overlap=True)
+
+
+# -------------------------------------------------------- audit level
+
+
+@pytest.mark.parametrize("kind", OVERLAP_KINDS)
+def test_audit_accepts_overlap_statics(kind):
+    for p in (2, 7, 36):
+        rep = audit_kind(kind, p, 4, root=p - 1, overlap=True)
+        assert rep.ok, rep.findings
+        assert rep.checked > 0
+
+
+@pytest.mark.parametrize("kind", ["allgatherv", "quantized_allreduce"])
+def test_audit_rejects_unsupported_overlap_statics(kind):
+    with pytest.raises(ValueError, match="overlap"):
+        statics_for_kind(kind, 4, 4, overlap=True)
+
+
+def test_audit_plan_flags_overlap_mismatch():
+    """A plan claiming the sequential executor over double-buffered
+    tables (or vice versa) is an audit finding, not a silent pass."""
+    from types import SimpleNamespace
+
+    statics = statics_for_kind("broadcast", 5, 3, overlap=True)
+    rep = audit_plan(SimpleNamespace(statics=statics, overlap=False))
+    assert not rep.ok
+    assert any(f.check == "overlap-flag" for f in rep.findings)
+    # flag agreement on real plans, both modes
+    for overlap in (False, True):
+        rep = audit_plan(host_plan("broadcast", 5, 3, overlap=overlap))
+        assert rep.ok, rep.findings
+
+
+# -------------------------------------------------- multidevice level
+
+
+@pytest.mark.multidevice
+@pytest.mark.parametrize("p,backend", [(2, "jnp"), (4, "jnp"),
+                                       (3, "pallas")])
+def test_overlap_device_plans_bitexact(p, backend):
+    """Device plans with the real ppermute exchange: overlap=True is
+    bit-exact vs sequential for every supported kind, and the
+    unsupported kinds raise at plan time."""
+    run_worker("overlap", p, backend)
+
+
+@pytest.mark.multidevice
+def test_trainer_streamed_grad_sync_parity():
+    """stream_grad_sync=True (per-bucket collectives launched from the
+    backward pass) trains within quantization-order divergence of the
+    single combined sync, with and without microbatching."""
+    run_worker("gradsync_stream", 2)
